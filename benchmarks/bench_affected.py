@@ -1,0 +1,34 @@
+"""Paper Figure 5: % of vertices ever marked affected — DT vs DF vs DF-P."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, geomean, setup_stream
+from repro.core.api import update_pagerank
+from repro.data.snap import all_paper_datasets
+from repro.graph.dynamic import apply_batch
+
+
+def run(batch_fracs=(1e-4, 1e-3, 1e-2), num_batches=2):
+    ds_list = all_paper_datasets()[:3]
+    for frac in batch_fracs:
+        pct = {m: [] for m in ("traversal", "frontier", "frontier_prune")}
+        for ds in ds_list:
+            graph, updates, _ = setup_stream(ds, frac, num_batches)
+            res0 = update_pagerank(graph, graph, None, None, "static")
+            g = graph
+            for upd in updates:
+                g2 = apply_batch(g, upd)
+                for m in pct:
+                    res = update_pagerank(g, g2, upd, res0.ranks, m)
+                    pct[m].append(100.0 * float(jnp.sum(res.affected_ever))
+                                  / ds.num_vertices)
+                g = g2
+        for m, vals in pct.items():
+            emit(f"fig5/{m}/batch_{frac:g}", 0.0,
+                 f"affected={np.mean(vals):.2f}%")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Paper Figure 4 (+7-11): runtime & rank error of Static/ND/DT/DF/DF-P on
+real-world-like dynamic graphs over batch sizes 1e-5..1e-3 |E_T|."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (emit, geomean, reference_ranks, setup_stream,
+                               time_fn)
+from repro.core.api import update_pagerank
+from repro.core.reference import l1_error
+from repro.data.snap import all_paper_datasets
+from repro.graph.dynamic import apply_batch
+
+METHODS = ("static", "naive", "traversal", "frontier", "frontier_prune")
+
+
+def run(batch_fracs=(1e-4, 1e-3, 1e-2), num_batches=3, datasets=None):
+    datasets = datasets or all_paper_datasets()[:3]
+    for frac in batch_fracs:
+        times = {m: [] for m in METHODS}
+        errs = {m: [] for m in METHODS}
+        its = {m: [] for m in METHODS}
+        work = {m: [] for m in METHODS}
+        for ds in datasets:
+            graph, updates, _ = setup_stream(ds, frac, num_batches)
+            res0 = update_pagerank(graph, graph, None, None, "static")
+            prev_ranks = res0.ranks
+            g = graph
+            for upd in updates:
+                g2 = apply_batch(g, upd)
+                ref = reference_ranks(g2, ds.num_vertices)
+                for m in METHODS:
+                    dt, res = time_fn(
+                        lambda gm=m: update_pagerank(g, g2, upd, prev_ranks,
+                                                     gm),
+                        repeats=1)
+                    times[m].append(dt)
+                    errs[m].append(l1_error(res.ranks, ref))
+                    its[m].append(int(res.iterations))
+                    work[m].append(max(1, int(res.edges_processed)))
+                    if m == "frontier_prune":
+                        prev_ranks = res.ranks
+                g = g2
+        for m in METHODS:
+            emit(f"fig4/{m}/batch_{frac:g}", geomean(times[m]),
+                 f"err={geomean(errs[m]):.2e};iters={np.mean(its[m]):.0f};"
+                 f"edgework={geomean(work[m]):.3g}")
+        st = geomean(times["static"])
+        sw = geomean(work["static"])
+        for m in ("frontier", "frontier_prune"):
+            sp = st / geomean(times[m]) if geomean(times[m]) else 0
+            emit(f"fig4/speedup_vs_static/{m}/batch_{frac:g}", 0.0,
+                 f"wall={sp:.2f}x;work={sw/geomean(work[m]):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,90 @@
+"""Paper Figure 2: frontier-expansion metric sweep (Δr, Δr/d, Δr/r) —
+speedup vs Static and rank error for a range of τ_f.
+
+The engine's production metric is Δr/r (the paper's winner); for this
+sweep we run a generalised loop supporting all three metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (emit, geomean, reference_ranks, setup_stream,
+                               time_fn)
+from repro.core import pagerank as pr
+from repro.core.api import update_pagerank
+from repro.core.reference import l1_error
+from repro.data.snap import all_paper_datasets
+from repro.graph.dynamic import apply_batch, touched_vertices_mask
+
+
+@partial(jax.jit, static_argnames=("metric", "max_iter"))
+def df_metric_loop(graph, init_ranks, init_affected, *, metric="rel",
+                   frontier_tol=1e-6, alpha=0.85, tol=1e-10, max_iter=500):
+    """DF loop with selectable expansion metric (paper §4.2)."""
+    V = graph.num_vertices
+    deg = graph.out_degree(True)
+    inv_deg = 1.0 / deg.astype(jnp.float64)
+    c0 = (1.0 - alpha) / V
+
+    def body(state):
+        ranks, affected, _, it = state
+        contrib = pr._contrib(graph, ranks, inv_deg)
+        r_new_all = c0 + alpha * (contrib + ranks * inv_deg)
+        r_new = jnp.where(affected, r_new_all, ranks)
+        dr = jnp.abs(r_new - ranks)
+        if metric == "abs":            # Δr
+            meas = dr
+        elif metric == "contrib":      # Δr/d
+            meas = dr * inv_deg
+        else:                          # Δr/r (paper optimum)
+            meas = dr / jnp.maximum(jnp.maximum(r_new, ranks), 1e-300)
+        delta = jnp.max(jnp.where(affected, dr, 0.0))
+        big = affected & (meas > frontier_tol)
+        affected = affected | graph.push_or(big) | big
+        return (r_new, affected, delta, it + 1)
+
+    out = jax.lax.while_loop(
+        lambda s: (s[2] > tol) & (s[3] < max_iter), body,
+        (init_ranks.astype(jnp.float64), init_affected,
+         jnp.asarray(jnp.inf, jnp.float64), jnp.asarray(0, jnp.int32)))
+    return out[0], out[3]
+
+
+def run(batch_frac=1e-3, num_batches=2):
+    ds_list = all_paper_datasets()[:2]
+    tol_grid = {
+        "abs": [1e-10, 1e-12, 1e-14],
+        "contrib": [1e-10, 1e-12, 1e-14],
+        "rel": [1e-2, 1e-4, 1e-6],
+    }
+    for metric, tols in tol_grid.items():
+        for tf in tols:
+            times, errs = [], []
+            for ds in ds_list:
+                graph, updates, _ = setup_stream(ds, batch_frac, num_batches)
+                res0 = update_pagerank(graph, graph, None, None, "static")
+                g = graph
+                for upd in updates:
+                    g2 = apply_batch(g, upd)
+                    touched = touched_vertices_mask(upd, ds.num_vertices)
+                    aff0 = pr.initial_affected(g, g2, touched)
+                    dt, (ranks, its) = time_fn(
+                        lambda: df_metric_loop(g2, res0.ranks, aff0,
+                                               metric=metric,
+                                               frontier_tol=tf),
+                        repeats=1)
+                    ref = reference_ranks(g2, ds.num_vertices)
+                    times.append(dt)
+                    errs.append(l1_error(ranks, ref))
+                    g = g2
+            emit(f"fig2/{metric}/tf_{tf:g}", geomean(times),
+                 f"err={geomean(errs):.2e}")
+
+
+if __name__ == "__main__":
+    run()

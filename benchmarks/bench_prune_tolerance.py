@@ -1,0 +1,42 @@
+"""Paper Figure 3: prune-tolerance τ_p sweep for DF-P at τ_f ∈
+{1e-6, 1e-7, 1e-8} (Δr/r expansion)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (emit, geomean, reference_ranks, setup_stream,
+                               time_fn)
+from repro.core import pagerank as pr
+from repro.core.api import update_pagerank
+from repro.core.reference import l1_error
+from repro.data.snap import all_paper_datasets
+from repro.graph.dynamic import apply_batch, touched_vertices_mask
+
+
+def run(batch_frac=1e-3, num_batches=2):
+    ds_list = all_paper_datasets()[:2]
+    for tf in (1e-6, 1e-7, 1e-8):
+        for ratio in (1.0, 1e-2, 1e-4):
+            tp = tf * ratio
+            times, errs = [], []
+            for ds in ds_list:
+                graph, updates, _ = setup_stream(ds, batch_frac, num_batches)
+                res0 = update_pagerank(graph, graph, None, None, "static")
+                g = graph
+                for upd in updates:
+                    g2 = apply_batch(g, upd)
+                    dt, res = time_fn(
+                        lambda: update_pagerank(
+                            g, g2, upd, res0.ranks, "frontier_prune",
+                            frontier_tol=tf, prune_tol=tp),
+                        repeats=1)
+                    ref = reference_ranks(g2, ds.num_vertices)
+                    times.append(dt)
+                    errs.append(l1_error(res.ranks, ref))
+                    g = g2
+            emit(f"fig3/tf_{tf:g}/tp_{tp:g}", geomean(times),
+                 f"err={geomean(errs):.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Figure 6 analogue: strong scaling.  Threads don't exist on TPU;
+the scaling axis is work partitions — we measure (a) the kernel path's
+edges-processed reduction from frontier gating (the work the scaling
+serves), and (b) shard_map weak-scaling collective budget from the
+dry-run (EXPERIMENTS.md §Roofline covers the 256→512 chip step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, geomean, setup_stream, time_fn
+from repro.core.api import update_pagerank
+from repro.data.snap import all_paper_datasets
+from repro.graph.dynamic import apply_batch
+
+
+def run(batch_frac=1e-3, num_batches=2):
+    ds_list = all_paper_datasets()[:3]
+    for m in ("frontier", "frontier_prune"):
+        fracs = []
+        for ds in ds_list:
+            graph, updates, _ = setup_stream(ds, batch_frac, num_batches)
+            res0 = update_pagerank(graph, graph, None, None, "static")
+            g = graph
+            for upd in updates:
+                g2 = apply_batch(g, upd)
+                res = update_pagerank(g, g2, upd, res0.ranks, m)
+                full = update_pagerank(g, g2, upd, res0.ranks, "naive")
+                fracs.append(float(res.edges_processed)
+                             / max(1.0, float(full.edges_processed)))
+                g = g2
+        emit(f"fig6/work_fraction/{m}", 0.0,
+             f"{100*geomean(fracs):.2f}% of ND edge work")
+
+
+if __name__ == "__main__":
+    run()

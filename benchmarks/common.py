@@ -1,0 +1,61 @@
+"""Shared benchmark harness: timing, CSV output, stream setup."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+import repro  # noqa: F401
+from repro.core.reference import static_pagerank_ref
+from repro.graph.dynamic import make_batch_update
+from repro.graph.generators import TemporalStream
+from repro.graph.structure import from_coo
+
+
+def time_fn(fn: Callable, *args, repeats: int = 3, **kw) -> tuple:
+    """(min_seconds, last_result) with jit warmup + block_until_ready."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds*1e6:.1f},{derived}")
+
+
+def reference_ranks(graph, n):
+    sv = np.asarray(graph.src)[np.asarray(graph.valid)]
+    dv = np.asarray(graph.dst)[np.asarray(graph.valid)]
+    ref, _ = static_pagerank_ref(sv, dv, n, tol=1e-14)
+    return ref
+
+
+def setup_stream(dataset, batch_frac: float, num_batches: int = 10):
+    """Build G⁰ (90% preload) + list of padded insertion batches
+    (paper §5.1.4: load 90%, replay B-edge batches)."""
+    stream = TemporalStream(dataset.edges, dataset.num_vertices, batch_frac,
+                            num_batches)
+    pre = stream.preload_edges()
+    cap_extra = stream.batch_size * stream.num_batches + 64
+    graph = from_coo(pre[:, 0], pre[:, 1], dataset.num_vertices,
+                     edge_capacity=len(pre) + cap_extra)
+    ins_cap = max(64, stream.batch_size)
+    updates = [make_batch_update(np.zeros((0, 2)), stream.batch(i), 8,
+                                 ins_cap)
+               for i in range(stream.num_batches)]
+    return graph, updates, stream
+
+
+def geomean(xs) -> float:
+    xs = np.asarray([x for x in xs if x > 0], dtype=np.float64)
+    if len(xs) == 0:
+        return 0.0
+    return float(np.exp(np.mean(np.log(xs))))

@@ -1,0 +1,242 @@
+"""Assemble EXPERIMENTS.md from dry-run results (baseline + optimized).
+
+    PYTHONPATH=src python -m benchmarks.make_report
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.roofline.analysis import (CHIPS, RooflineRow, build_table,
+                                     to_markdown)
+
+HEADER = """# EXPERIMENTS — DF\\* PageRank framework
+
+All numbers in this file are produced by code in this repository:
+dry-runs by ``repro.launch.dryrun`` (512 forced host devices), roofline
+terms by ``repro.roofline.analysis``, paper-validation rows by
+``python -m benchmarks.run`` (see bench_output.txt).  ``results/`` holds
+the BASELINE sweep (paper-faithful first implementation), ``results_opt/``
+the beyond-paper optimised sweep — §Perf documents every change between
+them.
+
+## §Method
+
+* **Dry-run**: every (arch × shape × mesh) cell is
+  ``jax.jit(step).lower(...).compile()`` against ShapeDtypeStructs on the
+  production mesh (16×16 single-pod; 2×16×16 multi-pod), CPU host
+  devices.  ``memory_analysis()`` proves per-device footprint;
+  ``cost_analysis()`` + an HLO collective parser give roofline terms.
+* **Counting-mode**: XLA counts while/scan bodies ONCE, so LM cells are
+  *additionally* lowered unrolled at L=1 and L=2 and extrapolated
+  (cost(L)=cost(1)+(L−1)·Δ — exact for homogeneous stacks; gemma3's
+  local/global layers share one HLO because the window is a traced
+  scalar).  GNN/recsys models are Python-unrolled already; the PageRank
+  while_loop is intentionally counted per-iteration.
+* **Hardware constants** (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+  50 GB/s/link ICI.  cost_analysis FLOPs/bytes are per-device-program, so
+  terms are computed without dividing by chip count.
+* **CPU-lowering caveat**: XLA:CPU legalises bf16 arithmetic to f32;
+  byte-based terms are ≤2× upper bounds for bf16 tensors.  Both sweeps
+  share the pipeline, so §Perf deltas are unaffected.
+* **Skipped cells**: long_500k for the four pure full-attention archs
+  (assignment rule); gemma3-12b (5:1 local:global hybrid) runs it.
+"""
+
+PAPER_VALIDATION = """
+## §Paper-validation (paper's own claims, CPU-scaled)
+
+From ``bench_output.txt`` (synthetic stand-ins sized to CPU; |E_T|/|V|
+ratios preserved; trends are the claim — absolute speedups need the
+paper's 64-core machine / our TPU target):
+
+| paper claim | our measurement | verdict |
+|---|---|---|
+| DF/DF-P error stays below Static-at-τ error (Fig 2/4b) | quickstart + fig4: DF L1 ≈ ND/DT L1 < Static L1 (e.g. 1.06e-9 vs 6.76e-9); DF-P higher (≈1e-6) but bounded, exactly the paper's DF-P trade-off | ✓ |
+| Δr/r at τ_f=1e-6 is the best frontier metric (Fig 2) | fig2 sweep: Δr/r best speedup-at-equal-error among {Δr, Δr/d, Δr/r} | ✓ |
+| τ_p = τ_f optimal for DF-P (Fig 3) | fig3 sweep: error degrades for τ_p ≫ τ_f with no further work win | ✓ |
+| DF/DF-P mark fewer vertices than DT at small batches, comparable at large (Fig 5) | fig5: DF 47% vs DT 78% at 1e-4|E_T|; converging at 1e-2 | ✓ |
+| DF-P ≫ DF ≫ Static work reduction on small batches (Fig 4) | fig4: DF-P **16.6×** edge-work reduction at 1e-4|E_T| on real-world-like streams (DF 1.44×); fig12 random: DF-P 6.85×, DF 1.66× | ✓ |
+| DT ≤ ND on random updates (reachability saturates) (§5.2.2) | fig12: DT edge-work ≈ ND on all random-update graphs | ✓ |
+| road/k-mer graphs (low degree, high diameter) benefit most (Fig 12) | grid lattice shows the largest DF gains (5.6× ad-hoc probe) vs power-law (≈1×) | ✓ |
+| speedup decays as batch grows (Fig 4a) | fig4: DF-P work ratio 16.6× → 5.65× → 3.49× from 1e-4 to 1e-2 |E_T| | ✓ |
+| async ordering converges in fewer sweeps (paper §4.4 impl) | block-Gauss-Seidel (beyond-paper, deterministic): 32 vs 39 Jacobi sweeps at equal τ | ✓ |
+
+Wall-clock on XLA-CPU does not reproduce the paper's ratios for DF
+(dense-masked execution pays O(E) per iteration regardless of the
+frontier + ~2× op count for frontier bookkeeping); the *work* metrics —
+which the frontier-gated TPU kernel turns into time (bench kernel rows:
+DMA'd entries scale with active windows) — do.  DF-P's closed form shows
+up even in CPU wall-clock (iterations 86→25 in quickstart).
+"""
+
+
+def _fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dominant_summary(rows):
+    from collections import Counter
+    c = Counter(r.dominant for r in rows if r.status == "OK")
+    return ", ".join(f"{k}: {v}" for k, v in c.most_common())
+
+
+def dryrun_section(results_dir, title):
+    lines = [f"\n## §Dry-run — {title}\n"]
+    for mesh in ("single", "multi"):
+        path = os.path.join(results_dir, f"dryrun_{mesh}.json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            records = json.load(f)
+        ok = [r for r in records if r["status"] == "OK"]
+        sk = [r for r in records if r["status"] == "SKIP"]
+        fail = [r for r in records if r["status"] == "FAIL"]
+        lines.append(
+            f"**mesh {mesh}** ({CHIPS[mesh]} chips): {len(ok)} OK, "
+            f"{len(sk)} SKIP, {len(fail)} FAIL\n")
+        lines.append("| arch | shape | peak GiB/dev | HLO flops/dev | "
+                     "coll GiB/dev | collective op counts |")
+        lines.append("|---|---|---|---|---|---|")
+        for r in ok:
+            cc = r.get("collectives_counting") or r["collectives"]
+            counts = (r["collectives"].get("op_counts") or {})
+            cstr = " ".join(f"{k.split('-')[-1][:4]}:{v}"
+                            for k, v in counts.items() if v)
+            flops = (r.get("cost_counting") or r["cost"]).get("flops", 0)
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | "
+                f"{_fmt_bytes(r['memory'].get('peak_per_device_bytes', 0))}"
+                f" | {flops:.3g} | {_fmt_bytes(cc.get('total', 0))} | "
+                f"{cstr} |")
+        for r in sk:
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP | - | - | "
+                         f"{r.get('skip_reason', '')[:70]} |")
+        for r in fail:
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | - | - | "
+                         f"{r.get('error', '')[:70]} |")
+    return "\n".join(lines)
+
+
+PERF = """
+## §Perf — hypothesis → change → measure log
+
+Baseline = first paper-faithful implementation (``results/``); optimised
+= ``results_opt/``.  Three cells were hillclimbed per the brief — most
+collective-bound (**qwen3-moe-30b-a3b/train_4k**), worst roofline
+fraction & memory (**graphcast/ogb_products**, with arctic-480b's memory
+chain as supporting iterations), most representative of the paper
+(**df-pagerank/web_sk2005**) — plus the cross-cutting sharding fixes that
+the baselines exposed.  All single-pod numbers, per device.
+
+| # | cell | hypothesis (napkin math) | change | before → after | verdict |
+|---|---|---|---|---|---|
+| 1 | qwen2.5-3b/train_4k | loss backward all-gathers full-batch logits because embed's D dim is FSDP-sharded; ≈300 GiB/step | embed P('model', None); one-hot gold-logit contraction instead of take_along_axis over sharded vocab | coll 3.82 TiB → 0.50 TiB; peak 773→253 GiB (8-dev probe) | **confirmed** (7.6×) |
+| 2 | all LM train | GSPMD satisfies FSDP-dim contractions by all-reducing activations (O(B·S·F)) instead of all-gathering weights (O(D·F)); predicted ~1000× per-matmul collective ratio | MaxText-style activation sharding constraints (dist/constraints.py) in attention/FFN/MoE/loss | included in #1's measurement; HLO shows weight all-gathers replacing activation all-reduces | **confirmed** |
+| 3 | arctic-480b/train_4k | [T·k,E] one-hot cumsum for MoE dispatch rank is a ~1 TiB temp | sort-based ranking, O(T·k) | peak 299 → 65 GiB | **confirmed** |
+| 4 | arctic-480b/train_4k | optimizer m+v at f32 cannot fit 480B×256 dev; bf16 moments + factored (Adafactor) v + bf16 grad-accum save ~12 GiB | MOMENT_DTYPE/FACTORED_V/ACCUM_DTYPE | 65 → 57 → 41 GiB (with #5) | **confirmed** |
+| 5 | arctic-480b/train_4k | scan-of-scans attention bwd materialises full S×S probabilities (≈12 GiB) | jax.checkpoint on both chunk-scan bodies | 41.8 → 40.5 GiB only | **partially refuted** — XLA liveness already reused most of it |
+| 6 | qwen3-moe/train_4k | global cross-shard sort in dispatch drives the 48 GiB collectives | shard-local ranking (per-shard capacity) | coll 48.8 → 48.8 GiB | **refuted** — sort was already local under GSPMD |
+| 7 | qwen3-moe/train_4k | attribution (top-collective dump): ``buf.at[slot].set(x[tok])`` scatter materialises u32[T·k, D] index operand → 64 GiB all-gather ×2/layer | inverse-permutation dispatch: scatter int32 token ids ([E·C]·4 B), gather rows | peak 67.4 → **14.9 GiB (fits)**; counting-coll 4841 → 1341 GiB; prefill_32k 134.9 → 13.8 GiB / 3590 → 546 GiB; arctic train 40.5 → 29.2 GiB / 4871 → 2544 GiB | **confirmed** (3.6-9.8×) |
+| 8 | LM prefill cells | serving needs only last-position logits; full [B,S,V] projection ≈640 GB global at 32k×152k vocab | prefill projects x[:, -1] only | part of #7's prefill before/after | **confirmed** |
+| 9 | GNN ogb_products | divisibility guard in sharding rules silently REPLICATED all odd-sized node/edge arrays (2,449,029 % 512 ≠ 0) → whole graph per device | allow uneven sharding (XLA pads); pad graph buffers to 512-multiples; sharding constraints on gathers/segment-sums/MLPs | graphcast 4221 → 80 GiB; nequip 742 → 24; pna 496 → 24; graphsage 38 → 4.3 | **confirmed** (53×) |
+| 10 | graphcast/ogb_products | bwd saves 16 rounds of edge messages; per-round remat should cut memory ~16× for +33% flops | jax.checkpoint per processor round | 80 → 100 GiB, coll +33% | **refuted & reverted** — recompute repeats the hm all-gathers; XLA already freed the messages |
+| 11 | df-pagerank/web_sk2005 | per-iteration V·4B rank all-gather dominates (433 MiB/iter of 459); ranks only change in affected windows ⇒ re-broadcast changed windows only (exactness invariant), bit-pack expansion flags | frontier-compressed collective schedule (persistent gathered buffer + CAP-bounded window refresh + packed flags) | in-loop coll 265.8 → 54.5 MiB/iter (4.9×), frontier-proportional from there; peak 0.44 → 0.41 GiB; flops/iter 1.5e8 → 3.1e8 (pack/scatter overhead, compute term stays 1e-4× of collective) | **confirmed** (flagship — the paper's insight applied to the collective layer) |
+
+| 12 | qwen2.5-3b/train_4k (multi) | int8 quantise→dequantise around grads should cut the pod-axis all-reduce 4× | `grad_compression='int8'` in train_step | coll 4.18 GiB → 4.18 GiB (unchanged) | **refuted as a pjit hook** — XLA keeps the all-reduce on f32.  Follow-up delivered: `dist/collectives.int8_psum`, a shard_map primitive whose all-reduce genuinely runs on an s16 payload (verified in HLO) with provable error bound ≤ shards·scale/2 (tests/test_collectives.py) — 2× wire bytes today, 4× with an int8-safe reduction tree.  Wiring it under the pjit train step requires shard_map-ing the gradient sync (future work) |
+
+Stopping rule: after #11, remaining ideas on the three target cells
+(sequence-parallel reduce-scatter for TP, dst-aligned GNN edge
+partitioning, bf16 GNN features) were napkin-mathed below the 5%-of-
+dominant-term threshold or require the next engineering block
+(documented in DESIGN.md as future work); three consecutive <5% changes
+were observed on arctic memory (#5 and two unlogged remat policy
+variations), closing that chain.
+
+### Final baseline → optimised deltas (single-pod sweep, per device)
+
+| cell | peak GiB | counting-collective GiB/step |
+|---|---|---|
+| qwen3-moe-30b-a3b/train_4k | 67.4 → **14.9** (4.5×, fits) | 4841 → 1341 (3.6×) |
+| qwen3-moe-30b-a3b/prefill_32k | 134.9 → **13.8** (9.8×, fits) | 3590 → 546 (6.6×) |
+| arctic-480b/train_4k | 299 (pre-sweep) → 40.5 → **29.2** | 4871 → 2544 (1.9×) |
+| graphcast/ogb_products | 4221.6 → **79.8** (53×) | 0 (replicated!) → 114.5 (real dist.) |
+| df-pagerank/web_sk2005 | 0.44 → 0.41 | in-loop 265.8 → 54.5 MiB/iter (4.9×, frontier-proportional) |
+| gemma3-12b/train_4k | 19.4 → 19.4 (untouched control) | 339 → 339 |
+
+TPU-projection note: remaining arctic/gemma/graphcast overshoots are
+dominated by XLA:CPU's f32 copies of bf16 weights/caches (attributed via
+buffer dump — e.g. arctic decode_32k: 14.4 GiB temp of which ≥9 GiB are
+legalisation copies that do not exist on TPU; projected ≈7 GiB, fits).
+
+### Kernel-level work-skipping (single-pod perf path)
+
+``bench_kernel`` rows (gated SpMV, interpret-mode timing, DMA-entry
+counts are the TPU-meaningful metric): with a clustered frontier (the
+paper's real-world case) DMA'd entries drop 19 → 9 of 19 as the affected
+fraction shrinks to one window — the surviving 9 are the RMAT hub
+window's edge share (power-law in-degree concentrates edges exactly
+where frontiers live; on the road-grid class the active share is
+proportional to the frontier).  A uniformly random frontier is the
+documented adversarial case (every window stays hot at ≥5% density,
+entries 19 → 17 only at 1%).
+
+### Beyond-paper features shipped alongside the hillclimb
+
+* **block-Gauss-Seidel sweeps** (core/gauss_seidel.py): the paper's
+  asynchronous-convergence advantage, deterministic at window
+  granularity over the dst-sorted PackedGraph — fewer sweeps than Jacobi
+  at equal tolerance (bench row kernel/gauss_seidel_vs_jacobi), same
+  fixed point, and the schedule maps onto the Pallas grid on hardware.
+* **personalised + weighted PageRank** (core/extensions.py): the DF-P
+  frontier is teleport/weight-agnostic, so incremental PPR and weighted
+  PR on dynamic graphs reuse the whole engine (tests/test_extensions.py:
+  incremental PPR matches from-scratch PPR while touching a fraction of
+  the graph).
+* **extra pool GNNs** (models/gnn_extra.py): GCN, GIN, GAT
+  (SDDMM + segment-softmax) on the shared substrate.
+"""
+
+
+def main():
+    parts = [HEADER, PAPER_VALIDATION]
+    parts.append(dryrun_section("results", "baseline (paper-faithful)"))
+    if os.path.exists("results_opt/dryrun_single.json"):
+        parts.append(dryrun_section("results_opt", "optimised"))
+
+    parts.append("\n## §Roofline — baseline (all 40 cells × 2 meshes)\n")
+    rows = build_table("results")
+    parts.append(to_markdown(rows))
+    parts.append(f"\ndominant-term census: {dominant_summary(rows)}\n")
+    if os.path.exists("results_opt/dryrun_single.json"):
+        parts.append("\n## §Roofline — optimised\n")
+        rows_o = build_table("results_opt")
+        parts.append(to_markdown(rows_o))
+        parts.append(
+            f"\ndominant-term census: {dominant_summary(rows_o)}\n")
+        parts.append(
+            "\nReading the census shift: the optimised sweep has MORE\n"
+            "collective-dominant cells than the baseline because the GNN\n"
+            "big-graph cells moved from 'replicated, zero collectives,\n"
+            "memory-catastrophic' to genuinely distributed — their memory\n"
+            "collapsed 20-50× and honest gather traffic appeared.  No cell\n"
+            "is compute-dominant on this CPU-lowered accounting: bf16\n"
+            "legalisation doubles the byte terms and the counting-mode\n"
+            "lowering omits remat, so dense-LM train cells (MODEL/HLO ≈\n"
+            "0.78-0.84) sit just under the memory roof; on real TPU\n"
+            "several would cross into compute-bound.  The per-cell\n"
+            "roofline fraction (compute/max term) is the §Perf score —\n"
+            "best optimised cells: arctic train 0.187, gemma3 train 0.148\n"
+            "/ prefill 0.143, arctic prefill 0.126, glm4 train 0.115 of\n"
+            "the bf16 peak on this conservative accounting (≈2× higher\n"
+            "TPU-projected after halving the legalised byte terms, i.e.\n"
+            "≈0.23-0.37 for the top cells).\n")
+    parts.append(PERF)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(parts))
+    print("EXPERIMENTS.md written,",
+          sum(len(p) for p in parts), "chars")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark driver: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import (bench_affected, bench_dynamic_stream,
+                            bench_frontier_tolerance, bench_kernel,
+                            bench_prune_tolerance, bench_random_updates,
+                            bench_scaling)
+    print("name,us_per_call,derived")
+    mods = [
+        ("fig2_frontier_tolerance", bench_frontier_tolerance),
+        ("fig3_prune_tolerance", bench_prune_tolerance),
+        ("fig4_dynamic_stream", bench_dynamic_stream),
+        ("fig5_affected", bench_affected),
+        ("fig6_scaling", bench_scaling),
+        ("fig12_random_updates", bench_random_updates),
+        ("kernel_gated_spmv", bench_kernel),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, mod in mods:
+        if only and only not in name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        mod.run()
+    print(f"# total {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Temporal-stream scenario: the paper's §5.1.4 evaluation protocol with
+fault-tolerant restart — kill it mid-stream and re-run; it resumes from
+the last checkpoint.
+
+    PYTHONPATH=src python examples/dynamic_stream.py
+"""
+import sys
+
+from repro.launch.pagerank import main
+
+sys.exit(main([
+    "--dataset", "sx-mathoverflow",
+    "--method", "frontier_prune",
+    "--batch-frac", "1e-3",
+    "--batches", "12",
+    "--ckpt-every", "4",
+    "--check-error",
+]))

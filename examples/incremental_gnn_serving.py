@@ -1,0 +1,55 @@
+"""Beyond-paper scenario: DF-frontier incremental GNN embedding refresh.
+
+A GraphSAGE embedding service over a dynamic graph: on each edge batch,
+only embeddings in the affected receptive field are refreshed (the
+paper's frontier technique applied to GNNs — core/incremental_gnn.py).
+
+    PYTHONPATH=src python examples/incremental_gnn_serving.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.configs.graphsage_reddit import SMOKE as SAGE_SMOKE
+from repro.core.incremental_gnn import incremental_refresh
+from repro.graph.dynamic import (apply_batch, make_batch_update,
+                                 touched_vertices_mask)
+from repro.graph.generators import random_batch_update, rmat_edges
+from repro.graph.structure import from_coo
+from repro.models.gnn import GraphBatch, init_sage, sage_forward
+
+cfg = SAGE_SMOKE
+edges, n = rmat_edges(10, 8, seed=2)
+graph = from_coo(edges[:, 0], edges[:, 1], n, edge_capacity=len(edges) + 64)
+rng = np.random.default_rng(0)
+feats = jnp.asarray(rng.standard_normal((n, cfg.d_in)), jnp.float32)
+params = init_sage(cfg, jax.random.PRNGKey(0))
+
+
+def full_forward(g, x):
+    gb = GraphBatch(node_feats=x, edge_src=g.src, edge_dst=g.dst,
+                    edge_mask=g.valid, node_mask=jnp.ones((n,), bool))
+    return sage_forward(cfg, params, gb)
+
+
+emb = full_forward(graph, feats)
+print(f"serving embeddings for {n} nodes, dim {emb.shape[1]}")
+
+for step in range(5):
+    dele, ins = random_batch_update(edges, n, 8, seed=10 + step)
+    upd = make_batch_update(dele, ins, 16, 16)
+    graph_t = apply_batch(graph, upd)
+    touched = touched_vertices_mask(upd, n)
+    res = incremental_refresh(
+        graph_t, feats, emb, touched,
+        layer_fn=full_forward, n_layers=cfg.n_layers)
+    exact = full_forward(graph_t, feats)
+    # exactness on refreshed nodes + work saved
+    err = float(jnp.max(jnp.abs(jnp.where(
+        res.affected_ever[:, None], res.embeddings - exact, 0.0))))
+    stale = float(jnp.max(jnp.abs(res.embeddings - exact)))
+    print(f"batch {step}: refreshed {int(res.nodes_recomputed):5d}/{n} "
+          f"nodes  refreshed-err={err:.1e}  residual-stale={stale:.2e}")
+    graph, emb = graph_t, res.embeddings
+print("\nonly the affected receptive field was recomputed per batch.")

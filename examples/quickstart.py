@@ -1,0 +1,45 @@
+"""Quickstart: DF* PageRank on a dynamic graph in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+import repro  # noqa: F401  (enables x64 for fp64 ranks)
+from repro.core.api import update_pagerank
+from repro.core.reference import l1_error, static_pagerank_ref
+from repro.graph.dynamic import apply_batch, make_batch_update
+from repro.graph.generators import random_batch_update, rmat_edges
+from repro.graph.structure import from_coo
+
+# 1. build a power-law digraph (RMAT, 1024 vertices)
+edges, n = rmat_edges(scale=10, edge_factor=10, seed=0)
+graph = from_coo(edges[:, 0], edges[:, 1], n,
+                 edge_capacity=len(edges) + 256)
+print(f"graph: {n} vertices, {len(edges)} edges")
+
+# 2. static PageRank (paper defaults: α=0.85, τ=1e-10 L∞, self-loops)
+res0 = update_pagerank(graph, graph, None, None, "static")
+print(f"static: {int(res0.iterations)} iterations, "
+      f"Σranks={float(jnp.sum(res0.ranks)):.6f}")
+
+# 3. a batch update: 80% insertions / 20% deletions (paper §5.2.2)
+dele, ins = random_batch_update(edges, n, 64, seed=1)
+update = make_batch_update(dele, ins, 128, 128)
+graph_t = apply_batch(graph, update)
+
+# 4. update ranks with each approach, compare work + error
+sv = np.asarray(graph_t.src)[np.asarray(graph_t.valid)]
+dv = np.asarray(graph_t.dst)[np.asarray(graph_t.valid)]
+ref, _ = static_pagerank_ref(sv, dv, n, tol=1e-14)
+print(f"{'method':<16}{'iters':>6}{'affected':>10}{'edge-work':>12}"
+      f"{'L1 error':>12}")
+for method in ("static", "naive", "traversal", "frontier",
+               "frontier_prune"):
+    r = update_pagerank(graph, graph_t, update, res0.ranks, method)
+    print(f"{method:<16}{int(r.iterations):>6}"
+          f"{int(jnp.sum(r.affected_ever)):>10}"
+          f"{int(r.edges_processed):>12}"
+          f"{l1_error(r.ranks, ref):>12.2e}")
+print("\nDF/DF-P touch a fraction of the graph at matching accuracy — "
+      "the paper's contribution.")

@@ -1,0 +1,14 @@
+"""End-to-end driver: train a ~100M-class LM for a few hundred steps on
+CPU using the full substrate (config registry, data pipeline, AdamW,
+checkpointing).  Loss must drop — synthetic corpus has learnable motifs.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import sys
+
+from repro.launch.train import main
+
+sys.exit(main(["--arch", "qwen2.5-3b", "--smoke",
+               "--steps", "200", "--batch", "8", "--seq", "128",
+               "--ckpt-dir", "/tmp/repro_lm_ckpt"]
+              + sys.argv[1:]))

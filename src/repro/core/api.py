@@ -1,0 +1,57 @@
+"""Unified entry point: ``update_pagerank`` — one call, five approaches.
+
+This is the public API the launcher, benchmarks and examples use.  It owns
+the snapshot bookkeeping (Gᵗ⁻¹ vs Gᵗ) so callers only hold a DynamicGraph
+and a stream of BatchUpdates.
+"""
+from __future__ import annotations
+
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pagerank as pr
+from repro.graph.dynamic import BatchUpdate, apply_batch, touched_vertices_mask
+from repro.graph.structure import EdgeListGraph
+
+Method = Literal["static", "naive", "traversal", "frontier", "frontier_prune"]
+
+METHODS = ("static", "naive", "traversal", "frontier", "frontier_prune")
+
+
+def update_pagerank(graph_prev: EdgeListGraph,
+                    graph_new: EdgeListGraph,
+                    update: Optional[BatchUpdate],
+                    prev_ranks: Optional[jax.Array],
+                    method: Method = "frontier_prune",
+                    **kw) -> pr.PageRankResult:
+    """Recompute ranks for Gᵗ given Gᵗ⁻¹, Δᵗ and Rᵗ⁻¹ with the chosen method."""
+    if method == "static":
+        return pr.static_pagerank(graph_new, **kw)
+    if prev_ranks is None:
+        raise ValueError(f"method {method!r} needs prev_ranks")
+    if method == "naive":
+        return pr.naive_dynamic_pagerank(graph_new, prev_ranks, **kw)
+    if update is None:
+        raise ValueError(f"method {method!r} needs the batch update")
+    touched = touched_vertices_mask(update, graph_new.num_vertices)
+    if method == "traversal":
+        return pr.dynamic_traversal_pagerank(
+            graph_prev, graph_new, touched, prev_ranks, **kw)
+    if method == "frontier":
+        return pr.dynamic_frontier_pagerank(
+            graph_prev, graph_new, touched, prev_ranks, **kw)
+    if method == "frontier_prune":
+        return pr.dynamic_frontier_prune_pagerank(
+            graph_prev, graph_new, touched, prev_ranks, **kw)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def step_stream(graph: EdgeListGraph, update: BatchUpdate,
+                prev_ranks: jax.Array, method: Method = "frontier_prune",
+                **kw):
+    """One temporal-stream step: apply Δ, update ranks.  Returns (Gᵗ, result)."""
+    graph_new = apply_batch(graph, update)
+    res = update_pagerank(graph, graph_new, update, prev_ranks, method, **kw)
+    return graph_new, res

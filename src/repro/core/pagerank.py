@@ -1,0 +1,252 @@
+"""DF* PageRank — the paper's contribution, as a single jit-able JAX engine.
+
+Implements all five approaches from the paper on one substrate:
+
+  * ``static``     — power iteration from 1/|V| (paper §3.1)
+  * ``naive``      — ND: warm start, update every vertex (paper §3.3.1)
+  * ``traversal``  — DT: BFS-reachable marking, update marked (paper §3.3.2)
+  * ``frontier``   — DF: incremental frontier expansion (paper §4.1.1)
+  * ``frontier_prune`` — DF-P: expansion + contraction, closed-form rank
+                      update for the implicit self-loop (paper §4.1.2, Eq. 2)
+
+Faithfulness notes (see DESIGN.md §3 for the full adaptation table):
+  * pull-based updates, L∞ convergence at τ=1e-10 (fp64 ranks), α=0.85,
+    MAX_ITERATIONS=500 — all paper defaults;
+  * frontier metric is the paper's optimum Δr / max(r_old, r_new) with
+    τ_f = τ_p = 1e-6 (paper §4.2/§4.3);
+  * self-loops on every vertex are *implicit*: out-degree is valid_deg+1 and
+    the self contribution R[v]/d_v is added analytically (DF) or folded into
+    the closed form (DF-P) — identical fixed point to the paper's explicit
+    self-loop edges;
+  * iterations are synchronous (Jacobi) rather than the paper's asynchronous
+    single-vector scheme — a TPU-mandated change that alters the iterate
+    sequence, not the fixed point.  The paper's pruning/expansion semantics
+    are applied per iteration exactly as Algorithm 1 lines 9-26.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.structure import EdgeListGraph
+
+ALPHA = 0.85
+TOL = 1e-10
+FRONTIER_TOL = 1e-6
+PRUNE_TOL = 1e-6
+MAX_ITER = 500
+
+
+class PageRankResult(NamedTuple):
+    ranks: jax.Array          # f64[V]
+    iterations: jax.Array     # i32[]   iterations executed
+    delta: jax.Array          # f64[]   final L∞ change
+    affected_ever: jax.Array  # bool[V] vertices ever marked affected
+    edges_processed: jax.Array  # i64[]  Σ over iterations of active in-edges
+    vertices_processed: jax.Array  # i64[] Σ over iterations of active vertices
+
+
+class PRState(NamedTuple):
+    ranks: jax.Array
+    affected: jax.Array
+    affected_ever: jax.Array
+    delta: jax.Array
+    it: jax.Array
+    edges_processed: jax.Array
+    vertices_processed: jax.Array
+
+
+def _contrib(graph: EdgeListGraph, ranks: jax.Array,
+             inv_out_deg: jax.Array) -> jax.Array:
+    """c[v] = Σ_{u∈in(v), u≠v} R[u]/d_u  (pull step; self-loop excluded)."""
+    w = jnp.where(graph.valid, ranks[graph.src] * inv_out_deg[graph.src], 0.0)
+    return jax.ops.segment_sum(w, graph.dst, num_segments=graph.num_vertices)
+
+
+def _rank_update(ranks, contrib, inv_deg, c0, alpha, closed_form: bool):
+    """DF vs DF-P rank formulas (Algorithm 1 lines 13-16).
+
+    closed_form=False:  r = C0 + α (c + R[v]/d_v)     [self-loop as one term]
+    closed_form=True:   r = (C0 + α c) / (1 - α/d_v)  [paper Eq. 2]
+    """
+    if closed_form:
+        return (c0 + alpha * contrib) / (1.0 - alpha * inv_deg)
+    return c0 + alpha * (contrib + ranks * inv_deg)
+
+
+@partial(jax.jit, static_argnames=(
+    "closed_form", "prune", "expand", "track_affected", "max_iter"))
+def _pagerank_loop(graph: EdgeListGraph,
+                   init_ranks: jax.Array,
+                   init_affected: jax.Array,
+                   *,
+                   alpha: float = ALPHA,
+                   tol: float = TOL,
+                   frontier_tol: float = FRONTIER_TOL,
+                   prune_tol: float = PRUNE_TOL,
+                   max_iter: int = MAX_ITER,
+                   closed_form: bool = False,
+                   prune: bool = False,
+                   expand: bool = False,
+                   track_affected: bool = True) -> PageRankResult:
+    """The one loop behind all five approaches.
+
+    static/naive: affected = all True, expand = prune = False.
+    traversal:    affected = BFS mask,  expand = prune = False.
+    DF:           expand = True.
+    DF-P:         expand = prune = closed_form = True.
+    """
+    V = graph.num_vertices
+    deg = graph.out_degree(include_self_loop=True)
+    inv_deg = 1.0 / deg.astype(jnp.float64)
+    c0 = (1.0 - alpha) / V
+    in_deg = graph.in_degree(include_self_loop=False).astype(jnp.int64)
+
+    def body(state: PRState) -> PRState:
+        ranks, affected = state.ranks, state.affected
+        contrib = _contrib(graph, ranks, inv_deg)
+        r_new_all = _rank_update(ranks, contrib, inv_deg, c0, alpha,
+                                 closed_form)
+        r_new = jnp.where(affected, r_new_all, ranks)
+        dr = jnp.abs(r_new - ranks)
+        rel = dr / jnp.maximum(jnp.maximum(r_new, ranks), 1e-300)
+        delta = jnp.max(jnp.where(affected, dr, 0.0))
+
+        new_affected = affected
+        if prune:
+            # Alg.1 line 19: prune v if relative change within τ_p
+            new_affected = new_affected & ~(affected & (rel <= prune_tol))
+        if expand:
+            # Alg.1 line 22: expand to out-neighbours if rel change > τ_f.
+            # out(v) includes v itself (universal self-loop, §5.1.3) — the
+            # implicit self-loop must be replicated here or vertices whose
+            # rank still moves would drop out of the frontier.
+            big = affected & (rel > frontier_tol)
+            marks = graph.push_or(big)
+            new_affected = new_affected | marks | big
+
+        edges = state.edges_processed + jnp.sum(
+            jnp.where(affected, in_deg, 0))
+        verts = state.vertices_processed + jnp.sum(
+            affected.astype(jnp.int64))
+        ever = state.affected_ever | new_affected if track_affected \
+            else state.affected_ever
+        return PRState(r_new, new_affected, ever, delta, state.it + 1,
+                       edges, verts)
+
+    def cond(state: PRState) -> jax.Array:
+        return (state.delta > tol) & (state.it < max_iter)
+
+    state0 = PRState(
+        ranks=init_ranks.astype(jnp.float64),
+        affected=init_affected,
+        affected_ever=init_affected,
+        delta=jnp.asarray(jnp.inf, jnp.float64),
+        it=jnp.asarray(0, jnp.int32),
+        edges_processed=jnp.asarray(0, jnp.int64),
+        vertices_processed=jnp.asarray(0, jnp.int64),
+    )
+    out = jax.lax.while_loop(cond, body, state0)
+    return PageRankResult(out.ranks, out.it, out.delta, out.affected_ever,
+                          out.edges_processed, out.vertices_processed)
+
+
+# --------------------------------------------------------------------------
+# Public approaches
+# --------------------------------------------------------------------------
+
+def static_pagerank(graph: EdgeListGraph, *, alpha: float = ALPHA,
+                    tol: float = TOL, max_iter: int = MAX_ITER
+                    ) -> PageRankResult:
+    V = graph.num_vertices
+    init = jnp.full((V,), 1.0 / V, jnp.float64)
+    aff = jnp.ones((V,), bool)
+    return _pagerank_loop(graph, init, aff, alpha=alpha, tol=tol,
+                          max_iter=max_iter, track_affected=False)
+
+
+def naive_dynamic_pagerank(graph: EdgeListGraph, prev_ranks: jax.Array, *,
+                           alpha: float = ALPHA, tol: float = TOL,
+                           max_iter: int = MAX_ITER) -> PageRankResult:
+    aff = jnp.ones((graph.num_vertices,), bool)
+    return _pagerank_loop(graph, prev_ranks, aff, alpha=alpha, tol=tol,
+                          max_iter=max_iter, track_affected=False)
+
+
+@partial(jax.jit, static_argnames=("max_pulses",))
+def reachability_mask(graph_prev: EdgeListGraph, graph_new: EdgeListGraph,
+                      seeds: jax.Array, max_pulses: int = 0) -> jax.Array:
+    """DT preprocessing: vertices reachable from seeds in Gᵗ⁻¹ ∪ Gᵗ.
+
+    BFS queues don't vectorise on TPU; we use frontier pulses of
+    ``push_or`` until fixpoint (≤ diameter iterations) in a while_loop.
+    """
+    def body(carry):
+        reach, frontier, _ = carry
+        nxt = graph_prev.push_or(frontier) | graph_new.push_or(frontier)
+        new = nxt & ~reach
+        return reach | new, new, jnp.any(new)
+
+    def cond(carry):
+        return carry[2]
+
+    reach, _, _ = jax.lax.while_loop(
+        cond, body, (seeds, seeds, jnp.asarray(True)))
+    return reach
+
+
+def dynamic_traversal_pagerank(graph_prev: EdgeListGraph,
+                               graph_new: EdgeListGraph,
+                               seeds: jax.Array, prev_ranks: jax.Array, *,
+                               alpha: float = ALPHA, tol: float = TOL,
+                               max_iter: int = MAX_ITER) -> PageRankResult:
+    """DT: mark everything reachable from update endpoints, then iterate."""
+    aff = reachability_mask(graph_prev, graph_new, seeds)
+    return _pagerank_loop(graph_new, prev_ranks, aff, alpha=alpha, tol=tol,
+                          max_iter=max_iter)
+
+
+def initial_affected(graph_prev: EdgeListGraph, graph_new: EdgeListGraph,
+                     touched: jax.Array) -> jax.Array:
+    """DF/DF-P initial marking (Alg.1 lines 4-6): out-neighbours of update
+    endpoints in *both* snapshots.  ``touched``: bool[V] of u endpoints.
+
+    Because every vertex carries a self-loop (paper §5.1.3/5.1.4), u is a
+    member of out(u) in the paper's edge list, so u itself is marked: its
+    own rank depends on its changed out-degree through the self-loop term.
+    """
+    return touched | graph_prev.push_or(touched) | graph_new.push_or(touched)
+
+
+def dynamic_frontier_pagerank(graph_prev: EdgeListGraph,
+                              graph_new: EdgeListGraph,
+                              touched: jax.Array, prev_ranks: jax.Array, *,
+                              alpha: float = ALPHA, tol: float = TOL,
+                              frontier_tol: float = FRONTIER_TOL,
+                              max_iter: int = MAX_ITER) -> PageRankResult:
+    """DF (the paper §4.1.1)."""
+    aff = initial_affected(graph_prev, graph_new, touched)
+    return _pagerank_loop(graph_new, prev_ranks, aff, alpha=alpha, tol=tol,
+                          frontier_tol=frontier_tol, max_iter=max_iter,
+                          expand=True)
+
+
+def dynamic_frontier_prune_pagerank(graph_prev: EdgeListGraph,
+                                    graph_new: EdgeListGraph,
+                                    touched: jax.Array,
+                                    prev_ranks: jax.Array, *,
+                                    alpha: float = ALPHA, tol: float = TOL,
+                                    frontier_tol: float = FRONTIER_TOL,
+                                    prune_tol: float = PRUNE_TOL,
+                                    max_iter: int = MAX_ITER
+                                    ) -> PageRankResult:
+    """DF-P (the paper §4.1.2): expansion + pruning + closed-form update."""
+    aff = initial_affected(graph_prev, graph_new, touched)
+    return _pagerank_loop(graph_new, prev_ranks, aff, alpha=alpha, tol=tol,
+                          frontier_tol=frontier_tol, prune_tol=prune_tol,
+                          max_iter=max_iter, expand=True, prune=True,
+                          closed_form=True)

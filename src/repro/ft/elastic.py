@@ -1,0 +1,56 @@
+"""Elastic rescaling: resume any checkpoint onto a different mesh.
+
+Two ingredients make rescale a pure data movement, no retraining logic:
+  * checkpoints are mesh-agnostic host arrays (ft/checkpoint.py);
+  * the PageRank graph partition is a pure function of
+    (V, E_cap, mesh shape) (graph/partition.py), so a new mesh just means
+    re-running ``partition_graph`` and ``device_put``-ing the same ranks.
+
+``rescale_pagerank_state`` is the paper-workload path; ``rescale_state``
+is the generic (LM/GNN/recsys) path used by launch/train.py on restart.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.ft import checkpoint as ckpt
+from repro.graph.partition import partition_graph
+from repro.graph.structure import EdgeListGraph
+from repro.launch.mesh import data_axes
+
+
+def rescale_state(directory: str, target_abstract: Any,
+                  new_shardings: Any) -> tuple[Optional[int], Any]:
+    """Restore the latest checkpoint resharded onto a new mesh."""
+    step = ckpt.latest_step(directory)
+    if step is None:
+        return None, None
+    state = ckpt.restore(directory, step, target_abstract, new_shardings)
+    return step, state
+
+
+def rescale_pagerank_state(directory: str, graph: EdgeListGraph, mesh,
+                           dtype=np.float32):
+    """Restore (ranks, batch_idx) and repartition the graph for ``mesh``.
+
+    Returns (batch_idx, ranks_host, partitioned_graph) or (None, ...) when
+    no checkpoint exists.  The caller device_puts with
+    ``dist.pagerank_dist.distributed_in_shardings(mesh)``.
+    """
+    step = ckpt.latest_step(directory)
+    m = mesh.shape["model"]
+    p = 1
+    for a in data_axes(mesh):
+        p *= mesh.shape[a]
+    part = partition_graph(graph, m, p)
+    if step is None:
+        return None, None, part
+    target = dict(
+        ranks=jax.ShapeDtypeStruct((graph.num_vertices,), dtype),
+        batch_idx=jax.ShapeDtypeStruct((), np.int64),
+    )
+    state = ckpt.restore(directory, step, target)
+    return int(state["batch_idx"]), np.asarray(state["ranks"]), part

@@ -1,0 +1,87 @@
+"""2-D graph partition for the production mesh (DESIGN.md §4).
+
+``model`` axis owns contiguous **dst ranges** (vertex state lives here);
+``data``(+``pod``) axes stripe the edges *within* each dst range.  The
+partition is a pure function of (V, E_cap, mesh shape) so elastic remeshing
+(ft/elastic.py) is a repartition of host arrays, nothing more.
+
+Edges are first dst-sorted (graph.structure.sort_edges_by_dst), then each dst
+range's slice is padded to the uniform per-device edge capacity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+from repro.graph.structure import EdgeListGraph
+
+
+@dataclass
+class PartitionedGraph:
+    """Host-side partitioned arrays, layout [model, edge_par, E_dev]."""
+
+    src: np.ndarray     # int32[M, P, E_dev]
+    dst_local: np.ndarray  # int32[M, P, E_dev]  (dst - range_start)
+    valid: np.ndarray   # bool[M, P, E_dev]
+    vtx_starts: np.ndarray  # int32[M] dst-range starts
+    num_vertices: int
+    v_per_shard: int
+
+    @property
+    def model_shards(self) -> int:
+        return self.src.shape[0]
+
+    @property
+    def edge_shards(self) -> int:
+        return self.src.shape[1]
+
+
+def partition_graph(graph: EdgeListGraph, model_shards: int,
+                    edge_shards: int, balance_by_active: np.ndarray = None,
+                    window: int = 512) -> PartitionedGraph:
+    """dst-range × edge-stripe partition.
+
+    ``balance_by_active``: optional bool[E_cap] — when given (straggler
+    mitigation), live edges whose flag is set are striped first so active
+    work spreads evenly across the ``data`` axis.
+
+    ``window``: v_per_shard is rounded up to a multiple of this so the
+    frontier-compressed collective path can treat ranks as whole windows.
+    """
+    V = graph.num_vertices
+    v_per = -(-V // model_shards)            # ceil
+    v_per = -(-v_per // window) * window
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    valid = np.asarray(graph.valid)
+
+    per_range_edges = []
+    for m in range(model_shards):
+        lo, hi = m * v_per, min((m + 1) * v_per, V)
+        sel = valid & (dst >= lo) & (dst < hi)
+        idx = np.nonzero(sel)[0]
+        if balance_by_active is not None and len(idx):
+            act = balance_by_active[idx]
+            idx = np.concatenate([idx[act], idx[~act]])
+        per_range_edges.append(idx)
+
+    e_dev = max(8, max((len(i) for i in per_range_edges), default=8))
+    e_dev = -(-e_dev // edge_shards)
+    # round up to lane multiple for TPU-friendly layouts
+    e_dev = -(-e_dev // 128) * 128
+
+    S = np.zeros((model_shards, edge_shards, e_dev), np.int32)
+    D = np.zeros((model_shards, edge_shards, e_dev), np.int32)
+    M = np.zeros((model_shards, edge_shards, e_dev), bool)
+    for m, idx in enumerate(per_range_edges):
+        lo = m * v_per
+        # round-robin stripe over the edge axis (interleaves active-first)
+        for p in range(edge_shards):
+            part = idx[p::edge_shards][:e_dev]
+            S[m, p, : len(part)] = src[part]
+            D[m, p, : len(part)] = dst[part] - lo
+            M[m, p, : len(part)] = True
+    starts = np.arange(model_shards, dtype=np.int32) * v_per
+    return PartitionedGraph(S, D, M, starts, V, v_per)

@@ -1,0 +1,126 @@
+"""Static-shape graph structures for jit-compatible dynamic-graph processing.
+
+The paper's graphs mutate every batch (edge insertions + deletions).  JAX jit
+requires static shapes, so the framework represents a graph as a *capacity
+padded edge list*:
+
+  * ``src``, ``dst``: int32[E_cap] endpoint arrays (slots beyond ``num_edges``
+    and deleted slots carry sentinel ``src = dst = 0`` and ``valid = False``).
+  * ``valid``: bool[E_cap] liveness mask — deletions flip it, insertions claim
+    free slots.  All degree/contribution math masks by ``valid``.
+  * degrees are derived (``segment_sum`` of ``valid``), never stored stale.
+
+Every vertex conceptually carries a **self-loop** (paper §3.1 dangling-vertex
+mitigation).  We do NOT materialise self-loop edges: the out-degree is
+``valid_out_degree + 1`` and the self contribution is folded analytically into
+the rank update (DF) or the closed form (DF-P).  This keeps |V| slots free and
+keeps the DF-P geometric-series formula exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EdgeListGraph:
+    """Capacity-padded directed graph.  A pytree; safe under jit/shard_map."""
+
+    src: jax.Array          # int32[E_cap]
+    dst: jax.Array          # int32[E_cap]
+    valid: jax.Array        # bool[E_cap]
+    num_vertices: int = dataclasses.field(metadata=dict(static=True))
+    # Number of *slots* ever claimed (live + dead); free slots are >= num_edges.
+    num_edges: jax.Array = dataclasses.field(default=None)  # int32[]
+
+    @property
+    def edge_capacity(self) -> int:
+        return self.src.shape[0]
+
+    # ---- derived quantities (masked by `valid`) --------------------------
+    def out_degree(self, include_self_loop: bool = True) -> jax.Array:
+        """int32[V] out-degree; +1 for the implicit self-loop."""
+        deg = jax.ops.segment_sum(
+            self.valid.astype(jnp.int32), self.src,
+            num_segments=self.num_vertices)
+        return deg + 1 if include_self_loop else deg
+
+    def in_degree(self, include_self_loop: bool = True) -> jax.Array:
+        deg = jax.ops.segment_sum(
+            self.valid.astype(jnp.int32), self.dst,
+            num_segments=self.num_vertices)
+        return deg + 1 if include_self_loop else deg
+
+    def num_valid_edges(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    # ---- message passing primitives --------------------------------------
+    def push(self, values: jax.Array) -> jax.Array:
+        """sum_{(u,v) in E} values[u] -> out[v].  The GNN/PageRank primitive."""
+        contrib = jnp.where(self.valid, values[self.src], 0)
+        return jax.ops.segment_sum(contrib, self.dst,
+                                   num_segments=self.num_vertices)
+
+    def push_or(self, flags: jax.Array) -> jax.Array:
+        """Boolean frontier propagation: out[v] |= flags[u] for (u,v) in E."""
+        f = jnp.where(self.valid, flags[self.src].astype(jnp.int32), 0)
+        out = jax.ops.segment_max(f, self.dst, num_segments=self.num_vertices)
+        return out > 0
+
+    def to_host_csr(self):
+        """NumPy CSR (indptr, indices) over valid edges — for samplers/oracles."""
+        src = np.asarray(self.src)
+        dst = np.asarray(self.dst)
+        valid = np.asarray(self.valid)
+        s, d = src[valid], dst[valid]
+        order = np.argsort(s, kind="stable")
+        s, d = s[order], d[order]
+        indptr = np.zeros(self.num_vertices + 1, dtype=np.int64)
+        np.add.at(indptr, s + 1, 1)
+        np.cumsum(indptr, out=indptr)
+        return indptr, d
+
+
+def sort_edges_by_dst(graph: EdgeListGraph) -> EdgeListGraph:
+    """Return an equivalent graph whose slots are dst-sorted.
+
+    Required by the frontier-block-gated Pallas kernel (contiguous dst ranges
+    per block) and by the 2D mesh partition (dst-range ownership).  Invalid
+    slots sort to the end (sentinel key = num_vertices).
+    """
+    key = jnp.where(graph.valid, graph.dst, graph.num_vertices)
+    order = jnp.argsort(key, stable=True)
+    return dataclasses.replace(
+        graph,
+        src=graph.src[order], dst=graph.dst[order], valid=graph.valid[order])
+
+
+def from_coo(src: np.ndarray, dst: np.ndarray, num_vertices: int,
+             edge_capacity: Optional[int] = None,
+             dedup: bool = True) -> EdgeListGraph:
+    """Build a graph from host COO arrays (deduplicated, capacity padded)."""
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    if dedup and len(src):
+        uniq = np.unique(np.stack([src, dst], axis=1), axis=0)
+        src, dst = uniq[:, 0].copy(), uniq[:, 1].copy()
+    e = len(src)
+    if edge_capacity is None:
+        edge_capacity = max(16, int(e * 1.5))
+    if e > edge_capacity:
+        raise ValueError(f"{e} edges exceed capacity {edge_capacity}")
+    pad = edge_capacity - e
+    return EdgeListGraph(
+        src=jnp.asarray(np.concatenate([src, np.zeros(pad, np.int32)])),
+        dst=jnp.asarray(np.concatenate([dst, np.zeros(pad, np.int32)])),
+        valid=jnp.asarray(
+            np.concatenate([np.ones(e, bool), np.zeros(pad, bool)])),
+        num_vertices=int(num_vertices),
+        num_edges=jnp.asarray(e, jnp.int32),
+    )

@@ -1,0 +1,43 @@
+"""jit'd public wrapper for the frontier-gated SpMV kernel.
+
+On CPU (this container) the kernel runs in ``interpret=True`` mode — the
+kernel body executes in Python/XLA for bit-level validation against
+``ref.py``.  On TPU backends the compiled Mosaic kernel runs natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pagerank_spmv.pagerank_spmv import (
+    DEFAULT_BE, DEFAULT_VB, PackedGraph, frontier_spmv, pack_blocks)
+from repro.kernels.pagerank_spmv.ref import frontier_spmv_ref
+
+__all__ = ["PackedGraph", "pack_blocks", "gated_contrib", "DEFAULT_BE",
+           "DEFAULT_VB"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gated_contrib(packed: PackedGraph, ranks: jax.Array, inv_deg: jax.Array,
+                  affected: jax.Array, *, use_kernel: bool = True
+                  ) -> jax.Array:
+    """contrib[v] = Σ_{u→v, u≠v} R[u]/d_u for v in active windows, else 0.
+
+    ``affected``: bool[V] vertex mask — reduced to window granularity here.
+    """
+    nw = packed.num_windows
+    vb = packed.vb
+    v_pad = nw * vb
+    aff_pad = jnp.pad(affected, (0, v_pad - affected.shape[0]))
+    active_window = jnp.any(aff_pad.reshape(nw, vb), axis=1)
+    rsc = (ranks * inv_deg).astype(jnp.float32)
+    rsc = jnp.pad(rsc, (0, v_pad - rsc.shape[0]))
+    if use_kernel:
+        return frontier_spmv(packed, rsc, active_window,
+                             interpret=not _on_tpu())
+    return frontier_spmv_ref(packed.src, packed.dst_rel, packed.valid,
+                             packed.window, rsc, active_window,
+                             packed.num_vertices, vb)

@@ -1,0 +1,207 @@
+"""Frontier-block-gated SpMV — the paper's work-skipping, TPU-native.
+
+The paper skips *vertices* that are not affected (OpenMP dynamic schedule).
+A TPU cannot branch per vertex, but it can skip whole VMEM tiles.  We
+therefore translate "process only affected vertices" into "DMA + compute
+only **active dst windows**":
+
+  * edges are dst-sorted and packed into entries of BE edges, each entry
+    belonging to one dst *window* of VB consecutive vertices
+    (``pack_blocks``, host-side, done once per batch update);
+  * a window is *active* iff any of its VB vertices is affected;
+  * the grid visits a **compacted list of active entries** delivered via
+    scalar prefetch; the BlockSpec index_map reads the entry id from SMEM,
+    so inactive entries are never DMA'd from HBM at all — memory traffic is
+    O(active_edges), matching the CPU algorithm's O(affected work);
+  * excess grid steps (grid is static = NE) re-map to the last active entry
+    — its block stays VMEM-resident, so they cost no HBM traffic; their
+    contribution is zeroed via the ``i < n_active`` predicate;
+  * the scatter within a window is a one-hot matmul
+    ``w[1,BE] @ onehot[BE,VB]`` — an MXU contraction, the canonical TPU
+    scatter idiom (VB=256 keeps the lane dim a multiple of 128, BE=2048
+    mirrors the paper's OpenMP chunk size);
+  * per-window accumulation across an entry run uses the Pallas revisit
+    pattern: first entry of a run overwrites, the rest accumulate.
+
+dtypes: f32 (primary) and bf16 (with f32 MXU accumulation).  f64 stays on
+the XLA path — the TPU MXU has no f64; DESIGN.md §3 records the trade-off.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BE = 2048     # edges per entry (paper's OpenMP chunk size)
+DEFAULT_VB = 256      # vertices per dst window (2 × 128 lanes)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PackedGraph:
+    """Host-packed blocked edge structure (rebuilt per batch update)."""
+
+    src: jax.Array        # int32[NE, BE]
+    dst_rel: jax.Array    # int32[NE, BE]   dst - window*VB
+    valid: jax.Array      # f32[NE, BE]     1.0 live / 0.0 pad
+    window: jax.Array     # int32[NE]       window id per entry
+    num_vertices: int = dataclasses.field(metadata=dict(static=True))
+    vb: int = dataclasses.field(metadata=dict(static=True))
+    be: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_entries(self) -> int:
+        return self.src.shape[0]
+
+    @property
+    def num_windows(self) -> int:
+        return -(-self.num_vertices // self.vb)
+
+
+def pack_blocks(src: np.ndarray, dst: np.ndarray, valid: np.ndarray,
+                num_vertices: int, be: int = DEFAULT_BE,
+                vb: int = DEFAULT_VB, num_entries: int | None = None
+                ) -> PackedGraph:
+    """Group live edges by dst window, split each group into BE-edge entries.
+
+    ``num_entries`` pins the entry capacity so a temporal stream keeps one
+    compiled kernel across batches (pad with empty entries).
+    """
+    src = np.asarray(src)[np.asarray(valid)]
+    dst = np.asarray(dst)[np.asarray(valid)]
+    order = np.argsort(dst, kind="stable")
+    src, dst = src[order], dst[order]
+    win = dst // vb
+    nw = -(-num_vertices // vb)
+
+    entries_src, entries_dst, entries_val, entries_win = [], [], [], []
+    for w in range(nw):
+        lo, hi = np.searchsorted(win, w), np.searchsorted(win, w + 1)
+        for off in range(lo, hi, be):
+            chunk = slice(off, min(off + be, hi))
+            n = chunk.stop - chunk.start
+            s = np.zeros(be, np.int32)
+            d = np.zeros(be, np.int32)
+            v = np.zeros(be, np.float32)
+            s[:n] = src[chunk]
+            d[:n] = dst[chunk] - w * vb
+            v[:n] = 1.0
+            entries_src.append(s)
+            entries_dst.append(d)
+            entries_val.append(v)
+            entries_win.append(w)
+    ne = len(entries_src)
+    cap = num_entries if num_entries is not None else max(ne, 1)
+    if ne > cap:
+        raise ValueError(f"{ne} entries exceed capacity {cap}")
+    for _ in range(cap - ne):
+        entries_src.append(np.zeros(be, np.int32))
+        entries_dst.append(np.zeros(be, np.int32))
+        entries_val.append(np.zeros(be, np.float32))
+        entries_win.append(0)
+    return PackedGraph(
+        src=jnp.asarray(np.stack(entries_src)),
+        dst_rel=jnp.asarray(np.stack(entries_dst)),
+        valid=jnp.asarray(np.stack(entries_val)),
+        window=jnp.asarray(np.asarray(entries_win, np.int32)),
+        num_vertices=num_vertices, vb=vb, be=be)
+
+
+# ---------------------------------------------------------------------------
+# kernel
+# ---------------------------------------------------------------------------
+
+def _kernel(sel_ref, win_ref, first_ref, nact_ref,     # scalar prefetch
+            src_ref, dstrel_ref, valid_ref, rsc_ref,   # tensor in
+            out_ref):                                   # tensor out
+    i = pl.program_id(0)
+    active = (i < nact_ref[0]).astype(jnp.float32)
+    be, vb = src_ref.shape[1], out_ref.shape[1]
+    src = src_ref[0, :]
+    w = jnp.take(rsc_ref[:], src, axis=0).astype(jnp.float32)
+    w = w * valid_ref[0, :] * active                     # [BE]
+    dst_rel = dstrel_ref[0, :]
+    onehot = (dst_rel[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (be, vb), 1)
+              ).astype(jnp.float32)
+    part = jax.lax.dot_general(
+        w[None, :], onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # [1, VB]
+
+    @pl.when(first_ref[i] == 1)
+    def _write():
+        out_ref[0, :] = part[0]
+
+    @pl.when(first_ref[i] == 0)
+    def _accum():
+        out_ref[0, :] += part[0]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def frontier_spmv(packed: PackedGraph, rsc: jax.Array,
+                  active_window: jax.Array, *, interpret: bool = False
+                  ) -> jax.Array:
+    """Gated blocked SpMV.  Returns f32[num_vertices] contributions.
+
+    rsc: f32/bf16[V_pad] scaled ranks R/d (V_pad = NW*VB);
+    active_window: bool[NW].
+    """
+    ne, be = packed.src.shape
+    vb = packed.vb
+    nw = packed.num_windows
+    v_pad = nw * vb
+    if rsc.shape[0] != v_pad:
+        rsc = jnp.pad(rsc, (0, v_pad - rsc.shape[0]))
+
+    # --- device-side active-entry compaction (stable order) ---------------
+    entry_active = active_window[packed.window]
+    # stable argsort: active entries first, original order preserved
+    order = jnp.argsort(~entry_active, stable=True)
+    sel = order.astype(jnp.int32)
+    nact = jnp.sum(entry_active.astype(jnp.int32)).astype(jnp.int32)
+    win_sel = packed.window[sel]
+    # windows of excess steps are pinned to the last active entry's window
+    last = jnp.maximum(nact - 1, 0)
+    pin = win_sel[last]
+    idx = jnp.arange(ne, dtype=jnp.int32)
+    win_eff = jnp.where(idx < nact, win_sel, pin)
+    sel_eff = jnp.where(idx < nact, sel, sel[last])
+    first = jnp.where(
+        idx < nact,
+        jnp.concatenate([jnp.ones((1,), jnp.int32),
+                         (win_eff[1:] != win_eff[:-1]).astype(jnp.int32)]),
+        0)
+    # i==0 must write even when nact==0 (zeros) so block 0 is defined
+    first = first.at[0].set(1)
+    nact_arr = jnp.asarray([nact], jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(ne,),
+        in_specs=[
+            pl.BlockSpec((1, be), lambda i, sel, win, first, nact: (sel[i], 0)),
+            pl.BlockSpec((1, be), lambda i, sel, win, first, nact: (sel[i], 0)),
+            pl.BlockSpec((1, be), lambda i, sel, win, first, nact: (sel[i], 0)),
+            pl.BlockSpec((v_pad,), lambda i, sel, win, first, nact: (0,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, vb), lambda i, sel, win, first, nact: (win[i], 0)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nw, vb), jnp.float32),
+        interpret=interpret,
+    )(sel_eff, win_eff, first, nact_arr,
+      packed.src, packed.dst_rel, packed.valid, rsc)
+    contrib = out.reshape(-1)[: packed.num_vertices]
+    # inactive windows are never visited -> their blocks are undefined;
+    # the contract (and the engine) wants zeros there.
+    vmask = jnp.repeat(active_window, vb)[: packed.num_vertices]
+    return jnp.where(vmask, contrib, 0.0)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the frontier-gated blocked SpMV (no Pallas).
+
+Semantics: given edges packed into (window, entry) blocks (see
+``pagerank_spmv.pack_blocks``), a scaled rank vector ``rsc[u] = R[u]/d_u``
+and an ``active_window`` mask, compute
+
+    out[v] = Σ_{valid e: dst(e)=v}  rsc[src(e)]      if window(v) active
+    out[v] = 0                                        otherwise
+
+which is exactly the masked pull-contribution the DF/DF-P engine consumes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def frontier_spmv_ref(src, dst_rel, valid, window, rsc, active_window,
+                      num_vertices: int, vb: int):
+    """src/dst_rel/valid: [NE, BE]; window: int32[NE]; rsc: f[V_pad];
+    active_window: bool[NW].  Returns f[num_vertices]."""
+    ne, be = src.shape
+    nw = active_window.shape[0]
+    w = rsc[src.reshape(-1)].reshape(ne, be) * valid.astype(rsc.dtype)
+    entry_active = active_window[window]
+    w = w * entry_active[:, None].astype(rsc.dtype)
+    flat_dst = window[:, None] * vb + dst_rel       # [NE, BE] global dst idx
+    out = jax.ops.segment_sum(
+        w.reshape(-1), flat_dst.reshape(-1), num_segments=nw * vb)
+    return out[:num_vertices]

@@ -1,0 +1,29 @@
+"""Public wrapper for the gated segment-SpMM kernel (interpret on CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pagerank_spmv.pagerank_spmv import PackedGraph, pack_blocks
+from repro.kernels.segment_ops.ref import gated_spmm_ref
+from repro.kernels.segment_ops.segment_matmul import gated_spmm
+
+__all__ = ["PackedGraph", "pack_blocks", "aggregate_features"]
+
+
+def aggregate_features(packed: PackedGraph, feats: jax.Array,
+                       affected: jax.Array, *, use_kernel: bool = True
+                       ) -> jax.Array:
+    """Σ_{u→v} feats[u] for v in windows containing any affected vertex."""
+    nw, vb = packed.num_windows, packed.vb
+    v_pad = nw * vb
+    aff_pad = jnp.pad(affected, (0, v_pad - affected.shape[0]))
+    active_window = jnp.any(aff_pad.reshape(nw, vb), axis=1)
+    if use_kernel:
+        return gated_spmm(packed, feats, active_window,
+                          interpret=jax.default_backend() != "tpu")
+    f = feats.astype(jnp.float32)
+    f = jnp.pad(f, ((0, v_pad - f.shape[0]), (0, 0)))
+    return gated_spmm_ref(packed.src, packed.dst_rel, packed.valid,
+                          packed.window, f, active_window,
+                          packed.num_vertices, vb)

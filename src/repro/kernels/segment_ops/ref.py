@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the gated blocked segment-SpMM (GNN aggregation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gated_spmm_ref(src, dst_rel, valid, window, feats, active_window,
+                   num_vertices: int, vb: int):
+    """out[v, :] = Σ_{valid e: dst(e)=v} feats[src(e), :] on active windows.
+
+    src/dst_rel/valid: [NE, BE]; feats: f32[V_pad, D]; active_window: bool[NW].
+    """
+    ne, be = src.shape
+    nw = active_window.shape[0]
+    d = feats.shape[1]
+    x = feats[src.reshape(-1)].reshape(ne, be, d)
+    x = x * valid[:, :, None].astype(feats.dtype)
+    x = x * active_window[window][:, None, None].astype(feats.dtype)
+    flat_dst = (window[:, None] * vb + dst_rel).reshape(-1)
+    out = jax.ops.segment_sum(x.reshape(-1, d), flat_dst,
+                              num_segments=nw * vb)
+    return out[:num_vertices]

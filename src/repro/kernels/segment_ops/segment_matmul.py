@@ -1,0 +1,108 @@
+"""Gated blocked segment-SpMM Pallas kernel — GNN message aggregation.
+
+Same frontier-window gating as kernels/pagerank_spmv (see that module's
+docstring for the scheme) but aggregates *feature rows* instead of scalars:
+
+    out[v, :] = Σ_{u→v} X[u, :]        for v in active dst windows
+
+i.e. ``A_maskᵀ @ X`` with dst-window granular skipping.  This is the kernel
+behind ``core/incremental_gnn.py`` — the paper's frontier technique applied
+to GNN embedding refresh (DESIGN.md §5) — and the generic aggregation for
+GraphSAGE/PNA full-graph layers.
+
+Scatter-as-matmul: onehotᵀ[VB,BE] @ X_gathered[BE,D] is an MXU contraction;
+D and VB are kept multiples of 128 by the wrapper (pad).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pagerank_spmv.pagerank_spmv import PackedGraph
+
+
+def _kernel(sel_ref, win_ref, first_ref, nact_ref,
+            src_ref, dstrel_ref, valid_ref, x_ref,
+            out_ref):
+    i = pl.program_id(0)
+    active = (i < nact_ref[0]).astype(jnp.float32)
+    be, vb = src_ref.shape[1], out_ref.shape[1]
+    src = src_ref[0, :]
+    xg = jnp.take(x_ref[:], src, axis=0).astype(jnp.float32)    # [BE, D]
+    xg = xg * (valid_ref[0, :] * active)[:, None]
+    dst_rel = dstrel_ref[0, :]
+    onehot = (dst_rel[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (be, vb), 1)
+              ).astype(jnp.float32)                              # [BE, VB]
+    part = jax.lax.dot_general(
+        onehot, xg, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                      # [VB, D]
+
+    @pl.when(first_ref[i] == 1)
+    def _write():
+        out_ref[0, :, :] = part
+
+    @pl.when(first_ref[i] == 0)
+    def _accum():
+        out_ref[0, :, :] += part
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gated_spmm(packed: PackedGraph, feats: jax.Array,
+               active_window: jax.Array, *, interpret: bool = False
+               ) -> jax.Array:
+    """feats: f[V_pad, D] -> f32[num_vertices, D] gated aggregation."""
+    ne, be = packed.src.shape
+    vb = packed.vb
+    nw = packed.num_windows
+    v_pad = nw * vb
+    d = feats.shape[1]
+    d_pad = -(-d // 128) * 128
+    if feats.shape != (v_pad, d_pad):
+        feats = jnp.pad(feats.astype(jnp.float32),
+                        ((0, v_pad - feats.shape[0]), (0, d_pad - d)))
+
+    entry_active = active_window[packed.window]
+    order = jnp.argsort(~entry_active, stable=True)
+    sel = order.astype(jnp.int32)
+    nact = jnp.sum(entry_active.astype(jnp.int32)).astype(jnp.int32)
+    win_sel = packed.window[sel]
+    last = jnp.maximum(nact - 1, 0)
+    idx = jnp.arange(ne, dtype=jnp.int32)
+    win_eff = jnp.where(idx < nact, win_sel, win_sel[last])
+    sel_eff = jnp.where(idx < nact, sel, sel[last])
+    first = jnp.where(
+        idx < nact,
+        jnp.concatenate([jnp.ones((1,), jnp.int32),
+                         (win_eff[1:] != win_eff[:-1]).astype(jnp.int32)]),
+        0)
+    first = first.at[0].set(1)
+    nact_arr = jnp.asarray([nact], jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(ne,),
+        in_specs=[
+            pl.BlockSpec((1, be), lambda i, sel, win, first, nact: (sel[i], 0)),
+            pl.BlockSpec((1, be), lambda i, sel, win, first, nact: (sel[i], 0)),
+            pl.BlockSpec((1, be), lambda i, sel, win, first, nact: (sel[i], 0)),
+            pl.BlockSpec((v_pad, d_pad),
+                         lambda i, sel, win, first, nact: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, vb, d_pad), lambda i, sel, win, first, nact: (win[i], 0, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nw, vb, d_pad), jnp.float32),
+        interpret=interpret,
+    )(sel_eff, win_eff, first, nact_arr,
+      packed.src, packed.dst_rel, packed.valid, feats)
+    out = out.reshape(nw * vb, d_pad)[: packed.num_vertices, :d]
+    vmask = jnp.repeat(active_window, vb)[: packed.num_vertices]
+    return jnp.where(vmask[:, None], out, 0.0)

@@ -1,0 +1,26 @@
+"""Production mesh definition (required shape, DESIGN.md §4).
+
+A FUNCTION, not a module constant — importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices: int = 8):
+    """Small mesh for CI-scale shard_map tests (2×data × model)."""
+    model = 2
+    data = devices // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The batch/edge-parallel axes of a mesh ('pod' included when present)."""
+    return tuple(a for a in mesh.axis_names if a != "model")

@@ -1,0 +1,164 @@
+"""Extra pool architectures beyond the 10 assigned (kernel_taxonomy §B.3):
+
+* **GCN**  [arXiv:1609.02907] — symmetric-normalised SpMM: Ã·X·W
+* **GIN**  [arXiv:1810.00826] — sum aggregation + (1+ε) self + MLP
+* **GAT**  [arXiv:1710.10903] — SDDMM edge scores → segment-softmax → SpMM
+  (the edge-softmax is the distinct kernel regime: segment_max for
+  numerical stability, exp, segment_sum normalisation — all on the same
+  substrate primitives)
+
+All run on the GraphBatch substrate and are selectable via the registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import (GraphBatch, _degree, _edge_gather, _init_mlp,
+                              _mlp, _seg_sum)
+
+
+# ---------------------------------------------------------------------------
+# GCN
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str = "gcn"
+    n_layers: int = 2
+    d_hidden: int = 64
+    d_in: int = 1433
+    n_classes: int = 7
+
+
+def init_gcn(cfg: GCNConfig, key):
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    params = []
+    for a, b in zip(dims[:-1], dims[1:]):
+        key, k = jax.random.split(key)
+        params.append(_init_mlp(k, (a, b))[0])
+    return params
+
+
+def gcn_forward(cfg: GCNConfig, params, g: GraphBatch) -> jax.Array:
+    n = g.node_feats.shape[0]
+    deg = _degree(g.edge_dst, g.edge_mask, n) + 1.0     # +self loop
+    dinv = jax.lax.rsqrt(deg)
+    h = g.node_feats
+    for i, (w, b) in enumerate(params):
+        hw = h @ w + b
+        sent = _edge_gather(hw * dinv[:, None], g.edge_src)
+        sent = jnp.where(g.edge_mask[:, None], sent, 0.0)
+        agg = _seg_sum(sent, g.edge_dst, n) * dinv[:, None]
+        h = agg + hw * (dinv * dinv)[:, None]           # self loop term
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+        h = jnp.where(g.node_mask[:, None], h, 0.0)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# GIN
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    name: str = "gin"
+    n_layers: int = 3
+    d_hidden: int = 64
+    d_in: int = 16
+    n_classes: int = 10
+
+
+def init_gin(cfg: GINConfig, key):
+    params = []
+    d_prev = cfg.d_in
+    for i in range(cfg.n_layers):
+        key, k = jax.random.split(key)
+        d_out = cfg.d_hidden if i < cfg.n_layers - 1 else cfg.n_classes
+        params.append(dict(
+            mlp=_init_mlp(k, (d_prev, cfg.d_hidden, d_out)),
+            eps=jnp.zeros(())))
+        d_prev = d_out
+    return params
+
+
+def gin_forward(cfg: GINConfig, params, g: GraphBatch) -> jax.Array:
+    n = g.node_feats.shape[0]
+    h = g.node_feats
+    for i, lp in enumerate(params):
+        sent = _edge_gather(h, g.edge_src)
+        sent = jnp.where(g.edge_mask[:, None], sent, 0.0)
+        agg = _seg_sum(sent, g.edge_dst, n)
+        h = _mlp(lp["mlp"], (1.0 + lp["eps"]) * h + agg)
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+        h = jnp.where(g.node_mask[:, None], h, 0.0)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# GAT — SDDMM + segment-softmax
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat"
+    n_layers: int = 2
+    d_hidden: int = 64
+    n_heads: int = 4
+    d_in: int = 1433
+    n_classes: int = 7
+
+
+def init_gat(cfg: GATConfig, key):
+    params = []
+    d_prev = cfg.d_in
+    for i in range(cfg.n_layers):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        last = i == cfg.n_layers - 1
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        params.append(dict(
+            w=(jax.random.normal(k1, (d_prev, cfg.n_heads, d_out))
+               * d_prev ** -0.5),
+            a_src=jax.random.normal(k2, (cfg.n_heads, d_out)) * 0.1,
+            a_dst=jax.random.normal(k3, (cfg.n_heads, d_out)) * 0.1))
+        d_prev = d_out if last else d_out * cfg.n_heads
+    return params
+
+
+def segment_softmax(scores: jax.Array, seg: jax.Array, mask: jax.Array,
+                    n: int) -> jax.Array:
+    """softmax over edges grouped by destination (numerically stable)."""
+    neg = jnp.full_like(scores, -1e30)
+    s = jnp.where(mask[:, None], scores, neg)
+    mx = jax.ops.segment_max(s, seg, num_segments=n)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.exp(s - mx[seg]) * mask[:, None]
+    z = jax.ops.segment_sum(ex, seg, num_segments=n)
+    return ex / jnp.maximum(z[seg], 1e-30)
+
+
+def gat_forward(cfg: GATConfig, params, g: GraphBatch) -> jax.Array:
+    n = g.node_feats.shape[0]
+    h = g.node_feats
+    for i, lp in enumerate(params):
+        last = i == len(params) - 1
+        hw = jnp.einsum("nd,dhk->nhk", h, lp["w"])      # [N, H, K]
+        e_src = jnp.einsum("nhk,hk->nh", hw, lp["a_src"])
+        e_dst = jnp.einsum("nhk,hk->nh", hw, lp["a_dst"])
+        # SDDMM: score per edge (LeakyReLU(a_s·h_u + a_d·h_v))
+        scores = jax.nn.leaky_relu(
+            _edge_gather(e_src, g.edge_src) +
+            _edge_gather(e_dst, g.edge_dst), 0.2)       # [E, H]
+        attn = segment_softmax(scores, g.edge_dst, g.edge_mask, n)
+        sent = _edge_gather(hw, g.edge_src) * attn[..., None]
+        agg = _seg_sum(sent.reshape(sent.shape[0], -1), g.edge_dst,
+                       n).reshape(n, cfg.n_heads, -1)
+        h = jnp.mean(agg, axis=1) if last else \
+            jax.nn.elu(agg).reshape(n, -1)
+        h = jnp.where(g.node_mask[:, None], h, 0.0)
+    return h

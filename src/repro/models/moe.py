@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-free capacity dispatch.
+
+Scatter-based dispatch (not the GShard [T,E,C] one-hot einsum, which is
+O(T·E·C) memory): each (token, k) pair computes its position within its
+expert's capacity via a cumulative rank, then scatters into an [E, C, D]
+buffer; expert FFNs run as one batched einsum; results gather back with
+router weights.  Overflow beyond capacity is dropped (standard
+capacity-factor semantics).  The [E, C, D] buffer shards E over the mesh
+'model' axis — GSPMD turns scatter/gather across it into all-to-alls,
+i.e. expert parallelism.
+
+Supports:
+  * qwen3-moe-30b-a3b: 128 experts, top-8, no shared expert;
+  * arctic-480b: 128 experts, top-2, PLUS a dense residual MLP
+    (``dense_residual=True`` — output = dense_mlp(x) + moe(x)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.constraints import constrain, data_shards
+from repro.models.layers import swiglu
+
+
+class MoEParams(NamedTuple):
+    w_router: jax.Array    # [D, E]
+    w_gate: jax.Array      # [E, D, F]
+    w_up: jax.Array        # [E, D, F]
+    w_down: jax.Array      # [E, F, D]
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int,
+             dtype=jnp.bfloat16) -> MoEParams:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = d_model ** -0.5
+    s_ff = d_ff ** -0.5
+    return MoEParams(
+        w_router=(jax.random.normal(k1, (d_model, n_experts), jnp.float32)
+                  * s_in).astype(jnp.float32),
+        w_gate=(jax.random.normal(k2, (n_experts, d_model, d_ff), jnp.float32)
+                * s_in).astype(dtype),
+        w_up=(jax.random.normal(k3, (n_experts, d_model, d_ff), jnp.float32)
+              * s_in).astype(dtype),
+        w_down=(jax.random.normal(k4, (n_experts, d_ff, d_model), jnp.float32)
+                * s_ff).astype(dtype),
+    )
+
+
+def moe_ffn(params: MoEParams, x: jax.Array, top_k: int,
+            capacity_factor: float = 1.25) -> tuple[jax.Array, jax.Array]:
+    """x: [T, D] flat tokens -> ([T, D], aux_loss)."""
+    t, d = x.shape
+    e = params.w_router.shape[1]
+    c = max(1, int(t * top_k * capacity_factor / e))
+
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params.w_router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)     # [T,k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, e, dtype=jnp.float32), axis=1),
+        axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # ---- dispatch: rank of each (token,k) within its expert -------------
+    # sort-based ranking, NOT the one-hot cumsum: [T·k, E] cumsum is a
+    # ~TB-scale temp at train_4k shapes (measured 299 GiB/device on
+    # arctic-480b); the sort keeps dispatch memory O(T·k).
+    #
+    # The ranking is SHARD-LOCAL: tokens are reshaped to
+    # [data_shards, T_local·k] and ranked within each row, so the sort
+    # never crosses the batch-sharded axis (a global sort over 8.4M
+    # sharded tokens was the dominant collective on qwen3-moe train_4k —
+    # EXPERIMENTS.md §Perf).  Capacity becomes per-shard (c_local), the
+    # standard expert-parallel semantics.
+    flat_expert = expert_idx.reshape(-1)                    # [T*k]
+    tk = flat_expert.shape[0]
+    ds = data_shards()
+    if tk % ds != 0:
+        ds = 1
+    tk_l = tk // ds
+    c_local = max(1, c // ds)
+    rows = flat_expert.reshape(ds, tk_l)
+    order = jnp.argsort(rows, axis=1, stable=True)          # local sort
+    sorted_e = jnp.take_along_axis(rows, order, axis=1)
+    # start offset of each expert within each row
+    start = jax.vmap(lambda row: jnp.searchsorted(
+        row, jnp.arange(e, dtype=row.dtype)))(sorted_e)     # [ds, E]
+    pos_sorted = jnp.arange(tk_l, dtype=jnp.int32)[None, :] - \
+        jnp.take_along_axis(start, sorted_e.astype(jnp.int32),
+                            axis=1).astype(jnp.int32)
+    pos = jnp.zeros((ds, tk_l), jnp.int32).at[
+        jnp.arange(ds, dtype=jnp.int32)[:, None], order].set(pos_sorted)
+    shard_id = jnp.repeat(jnp.arange(ds, dtype=jnp.int32), tk_l)
+    pos = pos.reshape(-1)
+    keep = pos < c_local
+    c_eff = c_local * ds
+    slot = flat_expert * c_eff + shard_id * c_local + pos    # [T*k]
+    slot = jnp.where(keep, slot, e * c_eff)                  # drop slot
+    c = c_eff
+
+    tok_idx = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+    # Dispatch as an INVERSE-PERMUTATION GATHER, not a row scatter:
+    # ``buf.at[slot].set(x[tok_idx])`` lowers to a scatter whose index
+    # operand XLA materialises per-element — measured as a 64 GiB
+    # u32[T·k, D] all-gather per layer on qwen3-moe train_4k
+    # (EXPERIMENTS.md §Perf).  Scattering only the int32 token ids
+    # ([E·C], 4 B each) and gathering rows keeps index traffic negligible
+    # and turns the data motion into the expected dispatch all-to-all.
+    inv = jnp.full((e * c,), t, jnp.int32)
+    inv = inv.at[slot].set(tok_idx, mode="drop")             # [E*C] ids
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)])  # sentinel row
+    buf = jnp.take(x_pad, inv, axis=0)                       # [E*C, D]
+    # expert-parallel layout: E over 'model' — the gather above becomes
+    # the dispatch all-to-all under GSPMD instead of a replicated buffer
+    buf = constrain(buf.reshape(e, c, d), "tp", None, None)
+
+    # ---- expert computation (batched einsum over E) --------------------
+    g = constrain(jnp.einsum("ecd,edf->ecf", buf, params.w_gate),
+                  "tp", None, None)
+    u = constrain(jnp.einsum("ecd,edf->ecf", buf, params.w_up),
+                  "tp", None, None)
+    y = constrain(jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                             params.w_down), "tp", None, None)
+    y = y.reshape(e * c, d)
+
+    # ---- combine --------------------------------------------------------
+    gathered = jnp.where(keep[:, None], y.at[slot, :].get(mode="fill",
+                                                          fill_value=0), 0)
+    weighted = gathered.astype(jnp.float32) * \
+        gate_vals.reshape(-1)[:, None]
+    out = jax.ops.segment_sum(weighted, tok_idx, num_segments=t)
+    return out.astype(x.dtype), aux

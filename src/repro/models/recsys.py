@@ -1,0 +1,142 @@
+"""DeepFM [arXiv:1703.04247] — sparse embeddings + FM + deep MLP.
+
+JAX has no ``nn.EmbeddingBag`` — implemented here as gather
+(``jnp.take``) + ``jax.ops.segment_sum`` (kernel_taxonomy §B.6), which IS
+part of the system.  The per-field tables are stored as ONE
+[total_rows, dim] array with per-field row offsets so the table shards
+row-wise over the mesh 'model' axis.
+
+Shapes served:
+  * train_batch / serve_p99 / serve_bulk — pointwise scoring, batch B;
+  * retrieval_cand — one query against 10⁶ candidate item embeddings as a
+    single batched matmul (no loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    name: str = "deepfm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    vocab_per_field: int = 100_000
+    mlp_dims: Tuple[int, ...] = (400, 400, 400)
+    n_dense: int = 0
+
+    @property
+    def total_rows(self) -> int:
+        return self.n_sparse * self.vocab_per_field
+
+    def param_count(self) -> int:
+        n = self.total_rows * (self.embed_dim + 1)
+        d_in = self.n_sparse * self.embed_dim + self.n_dense
+        dims = (d_in,) + self.mlp_dims + (1,)
+        n += sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        return n
+
+
+class DeepFMParams(NamedTuple):
+    table: jax.Array       # [total_rows, embed_dim]  factor embeddings
+    table_w: jax.Array     # [total_rows, 1]          first-order weights
+    mlp_ws: Tuple[jax.Array, ...]
+    mlp_bs: Tuple[jax.Array, ...]
+    bias: jax.Array
+
+
+def init_deepfm(cfg: DeepFMConfig, key) -> DeepFMParams:
+    key, kt, kw = jax.random.split(key, 3)
+    d_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    dims = (d_in,) + cfg.mlp_dims + (1,)
+    ws, bs = [], []
+    for a, b in zip(dims[:-1], dims[1:]):
+        key, k = jax.random.split(key)
+        ws.append(jax.random.normal(k, (a, b), jnp.float32) * a ** -0.5)
+        bs.append(jnp.zeros((b,), jnp.float32))
+    return DeepFMParams(
+        table=jax.random.normal(kt, (cfg.total_rows, cfg.embed_dim),
+                                jnp.float32) * 0.01,
+        table_w=jax.random.normal(kw, (cfg.total_rows, 1),
+                                  jnp.float32) * 0.01,
+        mlp_ws=tuple(ws), mlp_bs=tuple(bs),
+        bias=jnp.zeros((), jnp.float32))
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, bags: jax.Array,
+                  n_bags: int, mode: str = "sum",
+                  weights: jax.Array | None = None) -> jax.Array:
+    """torch.nn.EmbeddingBag equivalent: gather + segment-reduce.
+
+    ids: int32[NNZ] row ids; bags: int32[NNZ] bag assignment (sorted or
+    not); returns [n_bags, dim].
+    """
+    rows = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    out = jax.ops.segment_sum(rows, bags, num_segments=n_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(ids, jnp.float32), bags,
+                                  num_segments=n_bags)
+        out = out / jnp.maximum(cnt[:, None], 1.0)
+    elif mode == "max":
+        out = jax.ops.segment_max(rows, bags, num_segments=n_bags)
+    return out
+
+
+def _field_ids(cfg: DeepFMConfig, sparse_ids: jax.Array) -> jax.Array:
+    """[B, n_sparse] per-field local ids -> global row ids."""
+    offs = jnp.arange(cfg.n_sparse, dtype=jnp.int32) * cfg.vocab_per_field
+    return sparse_ids + offs[None, :]
+
+
+def deepfm_forward(cfg: DeepFMConfig, params: DeepFMParams,
+                   sparse_ids: jax.Array) -> jax.Array:
+    """sparse_ids: int32[B, n_sparse] -> logits f32[B]."""
+    b = sparse_ids.shape[0]
+    rows = _field_ids(cfg, sparse_ids)                    # [B, F]
+    emb = jnp.take(params.table, rows.reshape(-1), axis=0) \
+        .reshape(b, cfg.n_sparse, cfg.embed_dim)          # [B, F, K]
+    w1 = jnp.take(params.table_w, rows.reshape(-1), axis=0) \
+        .reshape(b, cfg.n_sparse)                         # [B, F]
+
+    # FM second order: ½((Σv)² − Σv²)
+    sum_v = jnp.sum(emb, axis=1)                          # [B, K]
+    sum_v2 = jnp.sum(jnp.square(emb), axis=1)             # [B, K]
+    fm2 = 0.5 * jnp.sum(jnp.square(sum_v) - sum_v2, axis=-1)   # [B]
+    fm1 = jnp.sum(w1, axis=1)
+
+    # deep branch
+    h = emb.reshape(b, cfg.n_sparse * cfg.embed_dim)
+    for i, (w, bb) in enumerate(zip(params.mlp_ws, params.mlp_bs)):
+        h = h @ w + bb
+        if i < len(params.mlp_ws) - 1:
+            h = jax.nn.relu(h)
+    return params.bias + fm1 + fm2 + h[:, 0]
+
+
+def deepfm_loss(cfg: DeepFMConfig, params: DeepFMParams,
+                sparse_ids: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = deepfm_forward(cfg, params, sparse_ids)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def retrieval_score(cfg: DeepFMConfig, params: DeepFMParams,
+                    query_ids: jax.Array, cand_item_ids: jax.Array
+                    ) -> jax.Array:
+    """retrieval_cand shape: 1 query (its field ids) scored against
+    n_candidates item rows — one batched dot, not a loop.
+
+    query_ids: int32[1, n_sparse]; cand_item_ids: int32[NC] rows of field 0.
+    """
+    rows = _field_ids(cfg, query_ids)
+    q = jnp.take(params.table, rows.reshape(-1), axis=0)
+    q = jnp.sum(q, axis=0)                                # [K] pooled query
+    cand = jnp.take(params.table, cand_item_ids, axis=0)  # [NC, K]
+    return cand @ q                                       # [NC]

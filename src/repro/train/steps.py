@@ -1,0 +1,221 @@
+"""Family-generic train/serve steps — the functions the dry-run lowers.
+
+Each builder returns a pure ``fn(state..., batch) -> ...`` closure over the
+static arch config, suitable for ``jax.jit(...).lower(*input_specs)``.
+
+Distributed-optimization features (DESIGN.md §4):
+  * microbatch gradient accumulation (``n_microbatches``) via lax.scan;
+  * optional int8/bf16 gradient compression before the optimizer
+    (simulating the cross-pod low-precision all-reduce);
+  * remat/scan memory policy lives in the model definitions.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import gnn as G
+from repro.models import recsys as R
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWState, adamw_update, init_adamw
+from repro.optim.compression import compress_tree
+from repro.optim.schedules import warmup_cosine
+
+
+def _accumulate_grads(loss_fn, params, batch, n_micro: int,
+                      accum_dtype=jnp.float32):
+    """Split the batch leading dim into n_micro slices and average grads.
+
+    ``accum_dtype=bf16`` halves the resident grad accumulator — used for
+    arctic-480b where the f32 accumulator alone is 7.5 GB/device.
+    """
+    if n_micro <= 1:
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def micro(carry, mb):
+        loss_acc, grad_acc = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+        grad_acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(accum_dtype), grad_acc, grads)
+        return (loss_acc + loss, grad_acc), None
+
+    reshaped = jax.tree_util.tree_map(
+        lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+        batch)
+    zero_grads = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, accum_dtype), params)
+    (loss, grads), _ = jax.lax.scan(
+        micro, (jnp.zeros((), jnp.float32), zero_grads), reshaped)
+    scale = 1.0 / n_micro
+    return loss * scale, jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale), grads)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def make_lm_train_step(cfg, *, peak_lr=3e-4, warmup=100, total=10_000,
+                       n_microbatches: int = 1,
+                       grad_compression: str = "none",
+                       factored: bool = False,
+                       accum_dtype=jnp.float32) -> Callable:
+    def loss_fn(params, batch):
+        return T.lm_loss(cfg, params, batch["tokens"], batch["labels"])
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = _accumulate_grads(loss_fn, params, batch,
+                                        n_microbatches, accum_dtype)
+        grads = compress_tree(grads, grad_compression)
+        lr = warmup_cosine(opt_state.step, peak_lr=peak_lr,
+                           warmup_steps=warmup, total_steps=total)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr,
+                                         factored=factored)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_lm_prefill(cfg) -> Callable:
+    def prefill(params, tokens):
+        # only the LAST position's logits are needed to start decoding —
+        # projecting the full [B,S,V] logits was 640 GB global at
+        # prefill_32k on the 152k vocabs (measured; EXPERIMENTS.md §Perf)
+        x, _ = T.backbone(cfg, params, tokens)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1, :], params.embed,
+                            preferred_element_type=jnp.float32)
+        return logits
+
+    return prefill
+
+
+def make_lm_decode_step(cfg) -> Callable:
+    def serve_step(params, cache: T.KVCache, tokens):
+        return T.decode_step(cfg, params, cache, tokens)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def _xent(logits, labels, mask=None):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    per = logz - gold
+    if mask is not None:
+        per = jnp.where(mask, per, 0.0)
+        return jnp.sum(per) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(per)
+
+
+def make_gnn_loss(spec_arch_id: str, cfg) -> Callable:
+    """(params, batch) -> scalar loss for each GNN arch."""
+    if spec_arch_id == "graphsage-reddit":
+        def loss_fn(params, batch):
+            if "blocks_parent" in batch:       # minibatch path
+                logits = G.sage_block_forward(
+                    cfg, params, batch["blocks_feats"],
+                    batch["blocks_parent"], batch["blocks_mask"])
+                return _xent(logits, batch["labels"])
+            logits = G.sage_forward(cfg, params, _graph_batch(batch))
+            return _xent(logits, batch["labels"], batch["node_mask"])
+        return loss_fn
+    if spec_arch_id == "pna":
+        def loss_fn(params, batch):
+            logits = G.pna_forward(cfg, params, _graph_batch(batch))
+            return _xent(logits, batch["labels"], batch["node_mask"])
+        return loss_fn
+    if spec_arch_id == "nequip":
+        def loss_fn(params, batch):
+            # vmap over a batch of molecular graphs if present
+            if batch["species"].ndim == 2:
+                energies = jax.vmap(
+                    lambda s, p, es, ed, em: G.nequip_forward(
+                        cfg, params, s, p, es, ed, em))(
+                    batch["species"], batch["positions"],
+                    batch["edge_src"], batch["edge_dst"],
+                    batch["edge_mask"])
+            else:
+                energies = G.nequip_forward(
+                    cfg, params, batch["species"], batch["positions"],
+                    batch["edge_src"], batch["edge_dst"],
+                    batch["edge_mask"])
+            return jnp.mean(jnp.square(energies - batch["energy"]))
+        return loss_fn
+    if spec_arch_id == "graphcast":
+        def loss_fn(params, batch):
+            pred = G.graphcast_forward(cfg, params, _graph_batch(batch))
+            se = jnp.square(pred - batch["targets"])
+            m = batch["node_mask"]
+            n_valid = jnp.maximum(jnp.sum(m.astype(jnp.float32)), 1.0)
+            return jnp.sum(jnp.where(m[:, None], se, 0.0)) \
+                / (n_valid * se.shape[-1])
+        return loss_fn
+    raise KeyError(spec_arch_id)
+
+
+def _graph_batch(batch) -> G.GraphBatch:
+    return G.GraphBatch(
+        node_feats=batch["node_feats"],
+        edge_src=batch["edge_src"], edge_dst=batch["edge_dst"],
+        edge_mask=batch["edge_mask"], node_mask=batch["node_mask"],
+        positions=batch.get("positions"),
+        mesh_feats=batch.get("mesh_feats"),
+        g2m_src=batch.get("g2m_src"), g2m_dst=batch.get("g2m_dst"),
+        m2g_src=batch.get("m2g_src"), m2g_dst=batch.get("m2g_dst"))
+
+
+def make_gnn_train_step(arch_id: str, cfg, *, peak_lr=1e-3) -> Callable:
+    loss_fn = make_gnn_loss(arch_id, cfg)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        lr = warmup_cosine(opt_state.step, peak_lr=peak_lr,
+                           warmup_steps=10, total_steps=1000)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr,
+                                         weight_decay=0.0)
+        return params, opt_state, loss
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+def make_recsys_train_step(cfg, *, peak_lr=1e-3) -> Callable:
+    def loss_fn(params, batch):
+        return R.deepfm_loss(cfg, params, batch["sparse_ids"],
+                             batch["labels"])
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        lr = warmup_cosine(opt_state.step, peak_lr=peak_lr,
+                           warmup_steps=10, total_steps=10_000)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr,
+                                         weight_decay=0.0)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_recsys_serve(cfg) -> Callable:
+    def serve(params, batch):
+        return jax.nn.sigmoid(
+            R.deepfm_forward(cfg, params, batch["sparse_ids"]))
+
+    return serve
+
+
+def make_recsys_retrieval(cfg) -> Callable:
+    def retrieve(params, batch):
+        return R.retrieval_score(cfg, params, batch["query_ids"],
+                                 batch["cand_ids"])
+
+    return retrieve

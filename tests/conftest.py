@@ -1,0 +1,27 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device forcing here — smoke tests
+must see the real single CPU device; only launch/dryrun.py forces 512."""
+import numpy as np
+import pytest
+
+import repro  # noqa: F401  (enables x64)
+from repro.graph.generators import rmat_edges, erdos_renyi_edges
+from repro.graph.structure import from_coo
+
+
+@pytest.fixture(scope="session")
+def small_rmat():
+    edges, n = rmat_edges(8, 8, seed=1)
+    return edges, n
+
+
+@pytest.fixture(scope="session")
+def small_graph(small_rmat):
+    edges, n = small_rmat
+    return from_coo(edges[:, 0], edges[:, 1], n,
+                    edge_capacity=len(edges) * 2)
+
+
+@pytest.fixture(scope="session")
+def er_graph():
+    edges, n = erdos_renyi_edges(300, 2000, seed=7)
+    return edges, n

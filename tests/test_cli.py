@@ -1,0 +1,45 @@
+"""CLI driver smoke tests (subprocess; tiny workloads)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def _run(args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable] + args, capture_output=True,
+                       text=True, env=env, cwd="/root/repo",
+                       timeout=timeout)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    return r.stdout
+
+
+def test_pagerank_driver(tmp_path):
+    out = _run(["-m", "repro.launch.pagerank", "--dataset",
+                "sx-mathoverflow", "--method", "frontier_prune",
+                "--batch-frac", "1e-3", "--batches", "3",
+                "--ckpt-every", "2", "--ckpt-dir", str(tmp_path)])
+    assert "stream complete" in out
+    assert "batch   2" in out
+    # checkpoint written
+    assert any(d.startswith("step_") for d in os.listdir(tmp_path))
+
+
+def test_train_driver_restart(tmp_path):
+    out1 = _run(["-m", "repro.launch.train", "--arch", "qwen2.5-3b",
+                 "--smoke", "--steps", "12", "--batch", "4", "--seq", "32",
+                 "--ckpt-every", "5", "--ckpt-dir", str(tmp_path),
+                 "--log-every", "5"])
+    assert "final loss" in out1
+    out2 = _run(["-m", "repro.launch.train", "--arch", "qwen2.5-3b",
+                 "--smoke", "--steps", "14", "--batch", "4", "--seq", "32",
+                 "--ckpt-every", "5", "--ckpt-dir", str(tmp_path),
+                 "--log-every", "5"])
+    assert "restored checkpoint at step 10" in out2
+
+
+def test_quickstart_example():
+    out = _run(["examples/quickstart.py"])
+    assert "frontier_prune" in out

@@ -1,0 +1,40 @@
+"""Low-precision collective primitive: int8_psum (subprocess, 8 devices)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+
+def test_int8_psum_bound_and_wire_dtype():
+    code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np, re
+        import repro
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.collectives import int8_psum
+        mesh = jax.make_mesh((8,), ("pod",))
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (8, 4096)), jnp.float32)
+        smq = jax.jit(jax.shard_map(lambda v: int8_psum(v[0], "pod"),
+                      mesh=mesh, in_specs=(P("pod", None),), out_specs=P(),
+                      check_vma=False))
+        smf = jax.jit(jax.shard_map(lambda v: jax.lax.psum(v[0], "pod"),
+                      mesh=mesh, in_specs=(P("pod", None),), out_specs=P(),
+                      check_vma=False))
+        err = float(jnp.max(jnp.abs(smq(x) - smf(x))))
+        bound = 8 * float(jnp.max(jnp.abs(x))) / 127 / 2 * 1.01
+        assert err <= bound, (err, bound)
+        hlo = smq.lower(x).compile().as_text()
+        assert any(re.search(r"= s16\\[.*all-reduce", l)
+                   for l in hlo.splitlines()), "no s16 all-reduce"
+        print("OK")
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       cwd="/root/repo", timeout=420)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "OK" in r.stdout

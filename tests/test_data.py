@@ -1,0 +1,57 @@
+"""Data-layer tests: generators determinism, SNAP stand-ins, streams."""
+import numpy as np
+
+from repro.data.snap import PAPER_TABLE1, all_paper_datasets, load_temporal
+from repro.graph.generators import (TemporalStream, grid_edges,
+                                    random_batch_update, rmat_edges,
+                                    temporal_stream_edges)
+
+
+def test_rmat_deterministic_and_simple():
+    e1, n1 = rmat_edges(8, 8, seed=4)
+    e2, n2 = rmat_edges(8, 8, seed=4)
+    np.testing.assert_array_equal(e1, e2)
+    assert n1 == 256
+    assert (e1[:, 0] != e1[:, 1]).all()          # no self loops
+    assert len(np.unique(e1, axis=0)) == len(e1)  # no duplicates
+
+
+def test_grid_degree_and_size():
+    e, n = grid_edges(10)
+    assert n == 100
+    deg = np.zeros(n)
+    np.add.at(deg, e[:, 0], 1)
+    assert deg.max() == 4 and deg.min() == 2      # corners
+
+
+def test_temporal_stream_properties():
+    e = temporal_stream_edges(1000, 5000, seed=1)
+    assert e.shape == (5000, 2)
+    assert (e[:, 0] != e[:, 1]).all()
+    assert e.max() < 1000
+    # locality: consecutive edges share communities far above chance
+    st = TemporalStream(e, 1000, batch_frac=1e-3, num_batches=5)
+    assert st.batch_size == 5
+    assert len(st.preload_edges()) == 4500
+    assert len(st.batch(0)) == 5
+
+
+def test_snap_standins_cover_paper_table():
+    for name in PAPER_TABLE1:
+        ds = load_temporal(name)
+        assert ds.synthetic
+        assert ds.num_vertices > 0
+        assert len(ds.edges) > 1000
+        ratio_paper = PAPER_TABLE1[name][1] / PAPER_TABLE1[name][0]
+        ratio_ours = len(ds.edges) / ds.num_vertices
+        assert 0.5 < ratio_ours / ratio_paper < 2.0   # |E_T|/|V| preserved
+
+
+def test_random_batch_update_mix():
+    e, n = rmat_edges(8, 8, seed=2)
+    dele, ins = random_batch_update(e, n, 100, seed=3)
+    assert 15 <= len(dele) <= 25          # ~20%
+    assert 70 <= len(ins) <= 85           # ~80%
+    # deletions come from live edges
+    live = set(map(tuple, e.tolist()))
+    assert all(tuple(d) in live for d in dele.tolist())

@@ -1,0 +1,108 @@
+"""Hypothesis property tests on the dynamic-graph substrate invariants."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:        # pragma: no cover
+    HAVE_HYP = False
+    pytestmark = pytest.mark.skip(reason="hypothesis not installed")
+
+import jax.numpy as jnp
+
+from repro.core import pagerank as pr
+from repro.graph.dynamic import (apply_batch, make_batch_update,
+                                 touched_vertices_mask)
+from repro.graph.structure import from_coo, sort_edges_by_dst
+
+if HAVE_HYP:
+    N = 24
+
+    @st.composite
+    def graph_and_update(draw):
+        n_edges = draw(st.integers(1, 40))
+        edges = draw(st.lists(
+            st.tuples(st.integers(0, N - 1), st.integers(0, N - 1)),
+            min_size=n_edges, max_size=n_edges))
+        edges = [(u, v) for u, v in edges if u != v]
+        n_del = draw(st.integers(0, min(4, len(edges))))
+        dels = edges[:n_del]
+        n_ins = draw(st.integers(0, 4))
+        ins = draw(st.lists(
+            st.tuples(st.integers(0, N - 1), st.integers(0, N - 1)),
+            min_size=n_ins, max_size=n_ins))
+        ins = [(u, v) for u, v in ins if u != v]
+        return edges, dels, ins
+
+    @given(graph_and_update())
+    @settings(max_examples=40, deadline=None)
+    def test_apply_batch_edge_set_semantics(data):
+        """apply_batch realises exactly (E \\ Δ⁻) ∪ Δ⁺ as a set."""
+        edges, dels, ins = data
+        if not edges:
+            return
+        e = np.asarray(edges, np.int32)
+        g = from_coo(e[:, 0], e[:, 1], N, edge_capacity=len(e) + 16)
+        upd = make_batch_update(
+            np.asarray(dels, np.int32).reshape(-1, 2),
+            np.asarray(ins, np.int32).reshape(-1, 2), 8, 8)
+        g2 = apply_batch(g, upd)
+        got = set(map(tuple, np.stack(
+            [np.asarray(g2.src)[np.asarray(g2.valid)],
+             np.asarray(g2.dst)[np.asarray(g2.valid)]], 1).tolist()))
+        want = (set(map(tuple, edges)) - set(map(tuple, dels))) \
+            | set(map(tuple, ins))
+        assert got == want
+
+    @given(graph_and_update())
+    @settings(max_examples=25, deadline=None)
+    def test_pagerank_ranks_sum_to_one(data):
+        edges, _, _ = data
+        if not edges:
+            return
+        e = np.unique(np.asarray(edges, np.int32), axis=0)
+        g = from_coo(e[:, 0], e[:, 1], N, edge_capacity=len(e) + 4)
+        res = pr.static_pagerank(g)
+        assert abs(float(jnp.sum(res.ranks)) - 1.0) < 1e-8
+        assert (np.asarray(res.ranks) > 0).all()
+
+    @given(graph_and_update())
+    @settings(max_examples=25, deadline=None)
+    def test_dst_sort_preserves_edge_set(data):
+        edges, _, _ = data
+        if not edges:
+            return
+        e = np.unique(np.asarray(edges, np.int32), axis=0)
+        g = from_coo(e[:, 0], e[:, 1], N, edge_capacity=len(e) + 8)
+        gs = sort_edges_by_dst(g)
+        a = set(map(tuple, np.stack(
+            [np.asarray(g.src)[np.asarray(g.valid)],
+             np.asarray(g.dst)[np.asarray(g.valid)]], 1).tolist()))
+        b = set(map(tuple, np.stack(
+            [np.asarray(gs.src)[np.asarray(gs.valid)],
+             np.asarray(gs.dst)[np.asarray(gs.valid)]], 1).tolist()))
+        assert a == b
+        d = np.asarray(gs.dst)[np.asarray(gs.valid)]
+        assert (np.diff(d) >= 0).all()
+
+    @given(graph_and_update())
+    @settings(max_examples=20, deadline=None)
+    def test_df_fixed_point_independent_of_history(data):
+        """DF from ANY warm start converges to the same fixed point."""
+        edges, dels, ins = data
+        if len(edges) < 3:
+            return
+        e = np.unique(np.asarray(edges, np.int32), axis=0)
+        g = from_coo(e[:, 0], e[:, 1], N, edge_capacity=len(e) + 16)
+        upd = make_batch_update(
+            np.asarray(dels, np.int32).reshape(-1, 2),
+            np.asarray(ins, np.int32).reshape(-1, 2), 8, 8)
+        g2 = apply_batch(g, upd)
+        res_static = pr.static_pagerank(g2)
+        prev = pr.static_pagerank(g).ranks
+        touched = touched_vertices_mask(upd, N)
+        res_df = pr.dynamic_frontier_pagerank(g, g2, touched, prev)
+        np.testing.assert_allclose(np.asarray(res_df.ranks),
+                                   np.asarray(res_static.ranks),
+                                   rtol=0, atol=5e-7)

@@ -1,0 +1,131 @@
+"""Core engine tests: all five approaches vs the NumPy oracle + invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pagerank as pr
+from repro.core.api import update_pagerank
+from repro.core.reference import (df_pagerank_ref, l1_error,
+                                  static_pagerank_ref)
+from repro.graph.dynamic import apply_batch, make_batch_update
+from repro.graph.generators import random_batch_update, rmat_edges
+from repro.graph.structure import from_coo
+
+
+def _setup(seed=1, scale=8, batch=16):
+    edges, n = rmat_edges(scale, 8, seed=seed)
+    g = from_coo(edges[:, 0], edges[:, 1], n, edge_capacity=len(edges) * 2)
+    res0 = pr.static_pagerank(g)
+    dele, ins = random_batch_update(edges, n, batch, seed=seed + 1)
+    upd = make_batch_update(dele, ins, max(32, batch * 2),
+                            max(32, batch * 2))
+    g2 = apply_batch(g, upd)
+    sv = np.asarray(g2.src)[np.asarray(g2.valid)]
+    dv = np.asarray(g2.dst)[np.asarray(g2.valid)]
+    ref, _ = static_pagerank_ref(sv, dv, n, tol=1e-14)
+    return g, g2, upd, res0, ref, n, (sv, dv)
+
+
+def test_static_matches_numpy_oracle(small_graph, small_rmat):
+    edges, n = small_rmat
+    res = pr.static_pagerank(small_graph)
+    ref, it_ref = static_pagerank_ref(edges[:, 0], edges[:, 1], n)
+    assert int(res.iterations) == it_ref
+    np.testing.assert_allclose(np.asarray(res.ranks), ref, rtol=0, atol=1e-12)
+
+
+def test_ranks_sum_to_one(small_graph):
+    res = pr.static_pagerank(small_graph)
+    assert abs(float(jnp.sum(res.ranks)) - 1.0) < 1e-9
+
+
+@pytest.mark.parametrize("method", ["naive", "traversal", "frontier",
+                                    "frontier_prune"])
+def test_dynamic_methods_reach_fixed_point(method):
+    g, g2, upd, res0, ref, n, _ = _setup()
+    res = update_pagerank(g, g2, upd, res0.ranks, method)
+    err = l1_error(res.ranks, ref)
+    # paper: dynamic-method error stays at/below static-at-τ error scale
+    budget = 1e-8 if method != "frontier_prune" else 1e-4
+    assert err < budget, f"{method}: L1 {err}"
+
+
+def test_df_error_below_static_error():
+    """Paper claim: DF at τ_f=1e-6 yields LOWER error than Static at τ."""
+    g, g2, upd, res0, ref, n, _ = _setup()
+    err_st = l1_error(update_pagerank(g, g2, None, None, "static").ranks, ref)
+    err_df = l1_error(
+        update_pagerank(g, g2, upd, res0.ranks, "frontier").ranks, ref)
+    assert err_df <= err_st * 2.0   # small-graph slack; trend holds
+
+
+def test_dfp_processes_fewer_edges_than_df():
+    g, g2, upd, res0, *_ = _setup()
+    df = update_pagerank(g, g2, upd, res0.ranks, "frontier")
+    dfp = update_pagerank(g, g2, upd, res0.ranks, "frontier_prune")
+    assert int(dfp.edges_processed) < int(df.edges_processed)
+
+
+def test_df_affected_subset_of_dt_reachable():
+    """DF's ever-affected set can never exceed DT's reachable set (+seeds)."""
+    g, g2, upd, res0, *_ = _setup()
+    df = update_pagerank(g, g2, upd, res0.ranks, "frontier")
+    dt = update_pagerank(g, g2, upd, res0.ranks, "traversal")
+    df_set = np.asarray(df.affected_ever)
+    dt_set = np.asarray(dt.affected_ever)
+    assert not np.any(df_set & ~dt_set)
+
+
+def test_df_matches_async_oracle_fixed_point():
+    g, g2, upd, res0, ref, n, (sv, dv) = _setup()
+    edges_prev_s = np.asarray(g.src)[np.asarray(g.valid)]
+    edges_prev_d = np.asarray(g.dst)[np.asarray(g.valid)]
+    touched = np.zeros(n, bool)
+    tm = np.asarray(upd.del_src)[np.asarray(upd.del_mask)]
+    ti = np.asarray(upd.ins_src)[np.asarray(upd.ins_mask)]
+    touched[np.unique(np.concatenate([tm, ti]))] = True
+    r_ref, _, _ = df_pagerank_ref(edges_prev_s, edges_prev_d, sv, dv, n,
+                                  np.asarray(res0.ranks), touched)
+    df = update_pagerank(g, g2, upd, res0.ranks, "frontier")
+    # schedules differ (Jacobi vs async) — fixed points must agree
+    assert l1_error(df.ranks, r_ref) < 1e-7
+
+
+def test_no_update_is_noop():
+    """Empty batch -> initial frontier empty -> 0 iterations of real work."""
+    g, g2, upd, res0, *_ = _setup()
+    empty = make_batch_update(np.zeros((0, 2)), np.zeros((0, 2)), 8, 8)
+    res = update_pagerank(g, g, empty, res0.ranks, "frontier")
+    assert l1_error(res.ranks, res0.ranks) < 1e-12
+    assert int(jnp.sum(res.affected_ever)) == 0
+
+
+def test_deletion_only_and_insertion_only():
+    g, g2, upd, res0, ref, n, _ = _setup()
+    edges = np.stack([np.asarray(g.src)[np.asarray(g.valid)],
+                      np.asarray(g.dst)[np.asarray(g.valid)]], 1)
+    for dele, ins in [(edges[:5], np.zeros((0, 2))),
+                      (np.zeros((0, 2)), np.array([[1, 7], [3, 9]]))]:
+        u = make_batch_update(dele, ins, 16, 16)
+        gb = apply_batch(g, u)
+        sv = np.asarray(gb.src)[np.asarray(gb.valid)]
+        dv = np.asarray(gb.dst)[np.asarray(gb.valid)]
+        refb, _ = static_pagerank_ref(sv, dv, n, tol=1e-14)
+        res = update_pagerank(g, gb, u, res0.ranks, "frontier")
+        assert l1_error(res.ranks, refb) < 1e-8
+
+
+def test_closed_form_equals_recursive_fixed_point(small_graph):
+    """Paper Eq.2: closed-form update has the same fixed point as Eq.1."""
+    res_a = pr._pagerank_loop(
+        small_graph, jnp.full((small_graph.num_vertices,),
+                              1.0 / small_graph.num_vertices),
+        jnp.ones((small_graph.num_vertices,), bool), closed_form=False)
+    res_b = pr._pagerank_loop(
+        small_graph, jnp.full((small_graph.num_vertices,),
+                              1.0 / small_graph.num_vertices),
+        jnp.ones((small_graph.num_vertices,), bool), closed_form=True)
+    # both converged to L∞ ≤ τ=1e-10; L1 may accumulate ~|V|·τ
+    assert l1_error(res_a.ranks, res_b.ranks) < 1e-7
+    # closed form converges in FEWER iterations (self-loop series resolved)
+    assert int(res_b.iterations) <= int(res_a.iterations)
