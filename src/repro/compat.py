@@ -1,0 +1,63 @@
+"""Forward-compat shims: expose the modern ``jax.*`` distributed API names
+on the pinned jax 0.4.x toolchain.
+
+The distributed layer (repro.dist) and its tests are written against the
+current jax API surface — ``jax.shard_map(..., check_vma=...)`` and
+``with jax.set_mesh(mesh):`` — which 0.4.x spells
+``jax.experimental.shard_map.shard_map(..., check_rep=...)`` and
+``with mesh:`` (Mesh is itself a context manager that installs the active
+resource env).  Importing :mod:`repro` installs these aliases once, so the
+same source runs unchanged on either jax generation.  Nothing is patched
+when the names already exist.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # modern jax: the real thing
+    shard_map = jax.shard_map          # type: ignore[attr-defined]
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map_04x
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                  check_vma=None, check_rep=None, **kwargs):
+        """0.4.x adapter: ``check_vma`` (new name) -> ``check_rep``."""
+        if check_rep is None:
+            check_rep = True if check_vma is None else bool(check_vma)
+        return _shard_map_04x(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_rep,
+                              **kwargs)
+
+    jax.shard_map = shard_map          # type: ignore[attr-defined]
+
+
+if not hasattr(jax, "set_mesh"):
+    def _set_mesh(mesh):
+        """On 0.4.x a Mesh is already a context manager that sets the
+        thread-local resource env ``with mesh:`` — return it unchanged so
+        ``with jax.set_mesh(mesh):`` works on both generations."""
+        return mesh
+
+    jax.set_mesh = _set_mesh           # type: ignore[attr-defined]
+
+
+def active_mesh():
+    """The mesh installed by ``jax.set_mesh``/``with mesh:``, else None.
+
+    Used by repro.dist.constraints to resolve logical axis names without
+    threading the mesh through every model call.
+    """
+    try:                               # modern jax
+        m = jax.sharding.get_abstract_mesh()   # type: ignore[attr-defined]
+        if m is not None and m.axis_names:
+            return m
+    except AttributeError:
+        pass
+    try:                               # 0.4.x thread-local resource env
+        from jax.interpreters import pxla
+        m = pxla.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:                  # pragma: no cover - defensive
+        pass
+    return None

@@ -19,14 +19,80 @@ Method = Literal["static", "naive", "traversal", "frontier", "frontier_prune"]
 
 METHODS = ("static", "naive", "traversal", "frontier", "frontier_prune")
 
+# one compiled distributed engine per (mesh, graph shape, method options);
+# FIFO-bounded so shape sweeps don't pin compiled executables forever
+_DIST_ENGINES: dict = {}
+_DIST_ENGINES_MAX = 8
+
+
+def distributed_pagerank(graph_prev: EdgeListGraph,
+                         graph_new: EdgeListGraph,
+                         update: Optional[BatchUpdate],
+                         prev_ranks: Optional[jax.Array],
+                         method: Method,
+                         mesh,
+                         **kw) -> pr.PageRankResult:
+    """``update_pagerank`` on a multi-device mesh via the shard_map engine.
+
+    Same method semantics as the single-device path: the initial affected
+    set is built per approach, then the DF (or DF-P, for
+    ``frontier_prune``) distributed iteration runs to the shared fixed
+    point.  Engines are cached per (mesh, shape, options) so a temporal
+    stream compiles once.
+    """
+    from repro.dist.pagerank_dist import DistributedEngine
+
+    V = graph_new.num_vertices
+    if method == "static":
+        ranks = jnp.full((V,), 1.0 / V, jnp.float64)
+        affected = jnp.ones((V,), bool)
+    else:
+        if prev_ranks is None:
+            raise ValueError(f"method {method!r} needs prev_ranks")
+        ranks = prev_ranks
+        if method == "naive":
+            affected = jnp.ones((V,), bool)
+        else:
+            if update is None:
+                raise ValueError(f"method {method!r} needs the batch update")
+            touched = touched_vertices_mask(update, V)
+            if method == "traversal":
+                affected = pr.reachability_mask(graph_prev, graph_new,
+                                                touched)
+            elif method in ("frontier", "frontier_prune"):
+                affected = pr.initial_affected(graph_prev, graph_new,
+                                               touched)
+            else:
+                raise ValueError(f"unknown method {method!r}")
+    prune = method == "frontier_prune"
+    key = (mesh, V, graph_new.edge_capacity, prune,
+           tuple(sorted(kw.items())))
+    eng = _DIST_ENGINES.get(key)
+    if eng is None:
+        while len(_DIST_ENGINES) >= _DIST_ENGINES_MAX:
+            _DIST_ENGINES.pop(next(iter(_DIST_ENGINES)))
+        eng = _DIST_ENGINES.setdefault(key, DistributedEngine(
+            mesh, V, graph_new.edge_capacity, prune=prune, **kw))
+    r, it, delta, ever, edges, verts = eng.run(graph_new, ranks, affected)
+    return pr.PageRankResult(r, it, delta, ever, edges, verts)
+
 
 def update_pagerank(graph_prev: EdgeListGraph,
                     graph_new: EdgeListGraph,
                     update: Optional[BatchUpdate],
                     prev_ranks: Optional[jax.Array],
                     method: Method = "frontier_prune",
+                    mesh=None,
                     **kw) -> pr.PageRankResult:
-    """Recompute ranks for Gᵗ given Gᵗ⁻¹, Δᵗ and Rᵗ⁻¹ with the chosen method."""
+    """Recompute ranks for Gᵗ given Gᵗ⁻¹, Δᵗ and Rᵗ⁻¹ with the chosen method.
+
+    ``mesh``: optional jax Mesh (with a ``model`` axis) — dispatches to the
+    shard_map distributed engine (repro.dist.pagerank_dist) instead of the
+    single-device loop.
+    """
+    if mesh is not None:
+        return distributed_pagerank(graph_prev, graph_new, update,
+                                    prev_ranks, method, mesh, **kw)
     if method == "static":
         return pr.static_pagerank(graph_new, **kw)
     if prev_ranks is None:
@@ -50,8 +116,9 @@ def update_pagerank(graph_prev: EdgeListGraph,
 
 def step_stream(graph: EdgeListGraph, update: BatchUpdate,
                 prev_ranks: jax.Array, method: Method = "frontier_prune",
-                **kw):
+                mesh=None, **kw):
     """One temporal-stream step: apply Δ, update ranks.  Returns (Gᵗ, result)."""
     graph_new = apply_batch(graph, update)
-    res = update_pagerank(graph, graph_new, update, prev_ranks, method, **kw)
+    res = update_pagerank(graph, graph_new, update, prev_ranks, method,
+                          mesh=mesh, **kw)
     return graph_new, res

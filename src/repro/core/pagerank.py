@@ -25,9 +25,8 @@ Faithfulness notes (see DESIGN.md §3 for the full adaptation table):
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

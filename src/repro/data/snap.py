@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import functools
 import os
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
@@ -74,7 +75,11 @@ def load_temporal(name: str, seed: int = 0) -> TemporalDataset:
     v_full, et_full, _ = PAPER_TABLE1[name]
     n = _SYNTH_SCALE_V[name]
     m = max(1000, int(et_full / v_full * n))      # preserve |E_T|/|V|
-    edges = temporal_stream_edges(n, m, seed=seed + hash(name) % 1000)
+    # process-stable name hash: builtin hash() is randomized per process,
+    # which regenerated a DIFFERENT synthetic graph on restart and broke
+    # checkpoint-resume (restored ranks belonged to another graph)
+    name_h = zlib.crc32(name.encode()) % 1000
+    edges = temporal_stream_edges(n, m, seed=seed + name_h)
     return TemporalDataset(name, edges, n, True)
 
 

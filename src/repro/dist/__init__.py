@@ -1,0 +1,14 @@
+"""repro.dist — the multi-device layer (DESIGN.md §4).
+
+Modules:
+  * ``pagerank_dist``  — shard_map DF/DF-P PageRank over the 2-D/3-D mesh;
+  * ``collectives``    — low-precision collective primitives (int8_psum);
+  * ``constraints``    — logical sharding hints for the model zoo;
+  * ``sharding``       — NamedSharding trees per arch family (dry-run).
+
+Kept import-light: importing ``repro.dist`` must not touch jax device
+state (launch/dryrun.py forces the device count *before* importing jax).
+"""
+from repro.dist import collectives, constraints, pagerank_dist, sharding
+
+__all__ = ["collectives", "constraints", "pagerank_dist", "sharding"]

@@ -1,0 +1,268 @@
+"""shard_map DF/DF-P PageRank over the 2-D/3-D production mesh.
+
+Layout (DESIGN.md §4, graph/partition.py): the ``model`` axis owns
+contiguous dst ranges — vertex state (ranks, inv out-degree, frontier
+mask) lives model-sharded, replicated across the data axes; the ``data``
+(+``pod``) axes stripe the edges *within* each dst range.
+
+One iteration on a device (m, p):
+  1. all_gather across ``model`` of the rank/degree product PACKED with
+     the previous sweep's above-tau_f mask (one [V/M, 2] gather — the
+     {0,1} mask rides the float lanes exactly; expansion marks are
+     consumed one sweep later, which only reassociates the affected-set
+     union);
+  2. gather per-edge contributions for the local stripe, segment-sum into
+     the local dst range;
+  3. psum partials across the data axes → exact pull-step contributions;
+  4. DF / DF-P rank update + frontier expansion (and pruning): the
+     per-stripe ``push_or`` marks are OR-combined across the data axes over
+     the int8-compressed wire (collectives.bool_or_psum — exact for {0,1}).
+
+The returned step is a single jit-able function whose while_loop carries
+only model-shard-local state, so per-iteration wire traffic is one
+packed [V/M, 2] all_gather + one contribution psum + one compressed mask
+exchange — independent of |E|.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import shard_map
+from repro.core.pagerank import (ALPHA, FRONTIER_TOL, MAX_ITER, PRUNE_TOL,
+                                 TOL)
+from repro.dist.collectives import bool_or_psum
+from repro.dist.sharding import data_axes as _data_axes
+from repro.graph.partition import (edges_per_device, partition_graph,
+                                   vertices_per_shard)
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _mesh_dims(mesh):
+    if "model" not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no 'model' axis")
+    dax = _data_axes(mesh)
+    sizes = dict(mesh.shape)
+    m = sizes["model"]
+    p = int(math.prod(sizes[a] for a in dax) or 1)
+    return m, p, dax
+
+
+def _edge_pspec(dax) -> P:
+    stripe = dax[0] if len(dax) == 1 else dax
+    return P("model", stripe, None)
+
+
+def distributed_in_shardings(mesh):
+    """NamedShardings for the 6 step args:
+    (src, dst_local, valid, ranks, inv_out_deg, affected)."""
+    dax = _data_axes(mesh)
+    es = NamedSharding(mesh, _edge_pspec(dax))
+    vs = NamedSharding(mesh, P("model"))
+    return (es, es, es, vs, vs, vs)
+
+
+def distributed_input_specs(mesh, n_vertices: int, edge_capacity: int,
+                            dtype=jnp.float32):
+    """Abstract (ShapeDtypeStruct) inputs for ``jit(...).lower`` — the
+    balanced-stripe shapes of partition_graph for this mesh."""
+    m, p, _ = _mesh_dims(mesh)
+    v_pad = vertices_per_shard(n_vertices, m) * m
+    e_dev = edges_per_device(edge_capacity, m, p)
+    sds = jax.ShapeDtypeStruct
+    return (sds((m, p, e_dev), jnp.int32),
+            sds((m, p, e_dev), jnp.int32),
+            sds((m, p, e_dev), jnp.bool_),
+            sds((v_pad,), dtype),
+            sds((v_pad,), dtype),
+            sds((v_pad,), jnp.bool_))
+
+
+class _DistState(NamedTuple):
+    ranks: jax.Array          # local [V/M]
+    base: jax.Array           # local bool[V/M]: affected, pre-expansion
+    big: jax.Array            # local bool[V/M]: above tau_f last sweep
+    ever: jax.Array           # local bool[V/M]
+    delta: jax.Array          # replicated scalar
+    it: jax.Array
+    edges: jax.Array
+    verts: jax.Array
+
+
+def build_distributed_step(mesh, n_vertices: int, *,
+                           alpha: float = ALPHA, tol: float = TOL,
+                           frontier_tol: float = FRONTIER_TOL,
+                           prune_tol: float = PRUNE_TOL,
+                           max_iter: int = MAX_ITER,
+                           prune: bool = False,
+                           closed_form: Optional[bool] = None,
+                           int8_frontier: bool = True,
+                           full_result: bool = False):
+    """DF (default) / DF-P (``prune=True``) iteration as one shard_map step.
+
+    Returns ``fn(src, dst_local, valid, ranks, inv_out_deg, affected)``
+    over partition_graph's layout: edge arrays [M, P, E_dev], vertex
+    arrays [v_per·M] (padded; pad slots must be unaffected with
+    inv_out_deg 0).  ``fn`` → (ranks, iterations, delta), plus
+    (affected_ever, edges_processed, vertices_processed) when
+    ``full_result``.  The fixed point matches core.pagerank — pruning,
+    expansion and the DF-P closed form are applied per Jacobi iteration
+    exactly as Algorithm 1 lines 9-26.
+    """
+    if closed_form is None:
+        closed_form = prune
+    _, _, dax = _mesh_dims(mesh)
+    c0_val = (1.0 - alpha) / n_vertices
+
+    def psum_data(x):
+        return jax.lax.psum(x, dax) if dax else x
+
+    def or_data(flags):
+        if not dax:
+            return flags
+        if int8_frontier:
+            return bool_or_psum(flags, dax)
+        return jax.lax.psum(flags.astype(jnp.int32), dax) > 0
+
+    def step(src, dst, valid, ranks, inv_deg, affected):
+        src, dst, valid = src[0, 0], dst[0, 0], valid[0, 0]
+        cdt = ranks.dtype
+        ranks = ranks.astype(jnp.float64) \
+            if jax.config.jax_enable_x64 else ranks
+        inv = inv_deg.astype(ranks.dtype)
+        v_per = ranks.shape[0]
+        c0 = jnp.asarray(c0_val, ranks.dtype)
+        tiny = jnp.asarray(jnp.finfo(ranks.dtype).tiny, ranks.dtype)
+        in_deg = psum_data(jax.ops.segment_sum(
+            valid.astype(jnp.int64), dst, num_segments=v_per))
+
+        def push_marks(big_full):
+            """Alg.1 line 22 marks for the local stripe: out-neighbours of
+            the gathered above-tau_f set, OR-combined across stripes."""
+            hit = valid & big_full[src]
+            return or_data(jax.ops.segment_max(
+                hit.astype(jnp.int32), dst, num_segments=v_per) > 0)
+
+        def body(st: _DistState) -> _DistState:
+            r = st.ranks
+            # ONE [V/M, 2] all_gather per iteration: the R/d pull view
+            # packed with last sweep's above-tau_f mask ({0,1} rides the
+            # float lanes exactly), so expansion costs no extra gather —
+            # its marks are simply consumed one sweep later, which only
+            # reassociates the affected-set union, never changes it.
+            packed = jnp.stack([r * inv, st.big.astype(r.dtype)], axis=1)
+            full = jax.lax.all_gather(packed, "model", tiled=True)
+            w_full = full[:, 0]
+            marks = push_marks(full[:, 1] > 0)
+            aff = st.base | st.big | marks
+
+            w = jnp.where(valid, w_full[src], 0.0)
+            contrib = psum_data(
+                jax.ops.segment_sum(w, dst, num_segments=v_per))
+            if closed_form:                       # DF-P (paper Eq. 2)
+                r_all = (c0 + alpha * contrib) / (1.0 - alpha * inv)
+            else:                                 # DF: self-loop as a term
+                r_all = c0 + alpha * (contrib + r * inv)
+            r_new = jnp.where(aff, r_all, r)
+            dr = jnp.abs(r_new - r)
+            rel = dr / jnp.maximum(jnp.maximum(r_new, r), tiny)
+            delta = jax.lax.pmax(
+                jnp.max(jnp.where(aff, dr, 0.0)), ("model",) + dax)
+
+            base = aff
+            if prune:                             # Alg.1 line 19
+                base = base & ~(aff & (rel <= prune_tol))
+            big = aff & (rel > frontier_tol)
+
+            edges = st.edges + jax.lax.psum(
+                jnp.sum(jnp.where(aff, in_deg, 0)), "model")
+            verts = st.verts + jax.lax.psum(
+                jnp.sum(aff.astype(jnp.int64)), "model")
+            return _DistState(r_new, base, big, st.ever | aff, delta,
+                              st.it + 1, edges, verts)
+
+        def cond(st: _DistState):
+            return (st.delta > tol) & (st.it < max_iter)
+
+        st0 = _DistState(
+            ranks=ranks, base=affected,
+            big=jnp.zeros_like(affected), ever=affected,
+            delta=jnp.asarray(jnp.inf, ranks.dtype),
+            it=jnp.asarray(0, jnp.int32),
+            edges=jnp.asarray(0, jnp.int64),
+            verts=jnp.asarray(0, jnp.int64))
+        out = jax.lax.while_loop(cond, body, st0)
+        res = (out.ranks.astype(cdt), out.it, out.delta)
+        if full_result:
+            # fold in the final sweep's unexpanded marks so affected_ever
+            # matches the single-device engine exactly
+            last = jax.lax.all_gather(out.big, "model", tiled=True)
+            res += (out.ever | push_marks(last), out.edges, out.verts)
+        return res
+
+    es = _edge_pspec(dax)
+    vs = P("model")
+    out_specs = (vs, P(), P())
+    if full_result:
+        out_specs += (vs, P(), P())
+    return shard_map(step, mesh=mesh,
+                     in_specs=(es, es, es, vs, vs, vs),
+                     out_specs=out_specs, check_vma=False)
+
+
+# ---------------------------------------------------------------------------
+# streaming engine: host partitioning + a cached compiled step
+# ---------------------------------------------------------------------------
+
+class DistributedEngine:
+    """Replays a dynamic-graph stream on a mesh with one compiled step.
+
+    Pre-sizes the per-device edge capacity from the graph's (static)
+    edge_capacity so the partition shape — and hence the compiled
+    shard_map program — is stable across stream batches; a heavily skewed
+    dst range can still grow e_dev, costing one retrace.
+    """
+
+    def __init__(self, mesh, n_vertices: int, edge_capacity: int, **opts):
+        import numpy as np
+        self._np = np
+        self.mesh = mesh
+        self.m, self.p, _ = _mesh_dims(mesh)
+        self.n_vertices = n_vertices
+        self.v_per = vertices_per_shard(n_vertices, self.m)
+        self.v_pad = self.v_per * self.m
+        self.e_dev = edges_per_device(edge_capacity, self.m, self.p)
+        self._fn = jax.jit(build_distributed_step(
+            mesh, n_vertices, full_result=True, **opts))
+        self._shardings = distributed_in_shardings(mesh)
+
+    def _pad(self, host_vec, dtype):
+        np = self._np
+        out = np.zeros((self.v_pad,), dtype)
+        out[: self.n_vertices] = host_vec
+        return out
+
+    def run(self, graph, ranks, affected):
+        """graph: EdgeListGraph; ranks f[V]; affected bool[V] →
+        (ranks f[V], iterations, delta, affected_ever bool[V],
+        edges_processed, vertices_processed)."""
+        np = self._np
+        part = partition_graph(graph, self.m, self.p,
+                               min_edges_per_device=self.e_dev)
+        self.e_dev = part.src.shape[2]            # sticky growth on skew
+        deg = np.asarray(graph.out_degree(include_self_loop=True))
+        inv = self._pad(1.0 / deg.astype(np.float64), np.float64)
+        args = (jnp.asarray(part.src), jnp.asarray(part.dst_local),
+                jnp.asarray(part.valid),
+                jnp.asarray(self._pad(np.asarray(ranks), np.float64)),
+                jnp.asarray(inv),
+                jnp.asarray(self._pad(np.asarray(affected), bool)))
+        args = tuple(jax.device_put(a, s)
+                     for a, s in zip(args, self._shardings))
+        r, it, delta, ever, edges, verts = self._fn(*args)
+        return (r[: self.n_vertices], it, delta,
+                ever[: self.n_vertices], edges, verts)

@@ -1,0 +1,139 @@
+"""NamedSharding trees per arch family for the dry-run cells (DESIGN.md §4).
+
+The rules mirror the logical constraints the models annotate
+(dist.constraints): LM/MoE weights shard their feature/vocab/expert dim
+over ``model`` (tensor parallelism; expert parallelism for MoE stacks),
+batches shard their leading dim over the data axes, GNN parameters are
+small and replicated (their giant node/edge *activations* are
+constraint-sharded instead), recsys embedding tables shard row-wise over
+``model``.  Optimizer state inherits the parameter rules leaf-for-leaf —
+ZeRO-style sharding falls out for free (optim/adamw.py).
+
+Every rule is divisibility-guarded: a dim that doesn't divide evenly over
+its axis stays replicated rather than letting GSPMD pad it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _axis_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    sizes = dict(mesh.shape)
+    return int(math.prod(sizes[a] for a in axes) or 1)
+
+
+def _map_named(obj, fn, path=()):
+    """tree_map that exposes NamedTuple/dict field names as the path —
+    model classes are matched by field name, never imported (repro.dist
+    sits below repro.models in the layering)."""
+    if obj is None:
+        return None
+    if hasattr(obj, "_fields"):                 # NamedTuple
+        return type(obj)(*[_map_named(getattr(obj, f), fn, path + (f,))
+                           for f in obj._fields])
+    if isinstance(obj, dict):
+        return {k: _map_named(v, fn, path + (k,)) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return type(obj)(_map_named(v, fn, path + (i,))
+                         for i, v in enumerate(obj))
+    return fn(path, obj)
+
+
+def _shard_dim(mesh, leaf, dim: Optional[int], axes=("model",)):
+    """NS sharding ``dim`` over ``axes`` when present+divisible, else
+    replicated."""
+    shape = getattr(leaf, "shape", None)
+    if shape is None:
+        return None                             # python scalar in a batch
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    n = _axis_size(mesh, axes)
+    if (dim is None or not axes or n <= 1 or dim >= len(shape)
+            or shape[dim] % n != 0):
+        return NamedSharding(mesh, P())
+    spec = [None] * len(shape)
+    spec[dim] = axes[0] if len(axes) == 1 else axes
+    return NamedSharding(mesh, P(*spec))
+
+
+# --- per-family parameter rules (leaf name -> dim sharded over 'model') ----
+
+_LM_LAST = ("wq", "wk", "wv", "w_gate", "w_up", "bq", "bk", "bv",
+            "w_router")
+_LM_SECOND_LAST = ("wo", "w_down")
+
+
+def _lm_rule(mesh, path, leaf):
+    names = [p for p in path if isinstance(p, str)]
+    name = names[-1] if names else ""
+    ndim = len(getattr(leaf, "shape", ()))
+    if name == "embed":
+        return _shard_dim(mesh, leaf, 0)        # vocab rows over 'model'
+    if "moe" in names and name in ("w_gate", "w_up", "w_down"):
+        return _shard_dim(mesh, leaf, 1)        # [L, E, ...]: expert dim
+    if name in _LM_LAST:
+        return _shard_dim(mesh, leaf, ndim - 1)
+    if name in _LM_SECOND_LAST:
+        return _shard_dim(mesh, leaf, ndim - 2)
+    return _shard_dim(mesh, leaf, None)         # norms, scalars
+
+
+def _recsys_rule(mesh, path, leaf):
+    names = [p for p in path if isinstance(p, str)]
+    name = names[-1] if names else ""
+    ndim = len(getattr(leaf, "shape", ()))
+    if name in ("table", "table_w"):
+        return _shard_dim(mesh, leaf, 0)        # embedding rows
+    if name == "mlp_ws":
+        return _shard_dim(mesh, leaf, ndim - 1)
+    return _shard_dim(mesh, leaf, None)
+
+
+def _gnn_rule(mesh, path, leaf):
+    return _shard_dim(mesh, leaf, None)         # params small: replicate
+
+
+_PARAM_RULES = {"lm": _lm_rule, "gnn": _gnn_rule, "recsys": _recsys_rule}
+
+
+def _batch_rule(mesh, path, leaf):
+    dax = data_axes(mesh)
+    return _shard_dim(mesh, leaf, 0, dax)       # leading dim data-parallel
+
+
+def family_shardings(family: str, mesh, params: Any, batch: Any,
+                     opt: Any = None):
+    """(param_shardings, batch_shardings, opt_shardings|None) trees for
+    ``jit(in_shardings=...)`` over the family's train/serve steps."""
+    rule = _PARAM_RULES[family]
+    pspec = _map_named(params, lambda p, l: rule(mesh, p, l))
+    bspec = _map_named(batch, lambda p, l: _batch_rule(mesh, p, l))
+    ospec = None
+    if opt is not None:
+        # AdamWState mirrors params under 'm'/'v' so the name rules apply;
+        # factored (v_row, v_col) leaves fall back per their own shapes.
+        ospec = _map_named(opt, lambda p, l: rule(mesh, p, l))
+    return pspec, bspec, ospec
+
+
+def lm_cache_specs(mesh, cache, batch: int):
+    """KV-cache shardings: batch over the data axes, KV heads over
+    ``model`` (both divisibility-guarded); seq stays unsharded because the
+    decode step dynamic-updates one position per step."""
+    dax = data_axes(mesh)
+    k = cache.k                                  # [L, B, S_max, KVH, hd]
+    spec = [None] * 5
+    if dax and batch % _axis_size(mesh, dax) == 0:
+        spec[1] = dax[0] if len(dax) == 1 else dax
+    if k.shape[3] % _axis_size(mesh, "model") == 0:
+        spec[3] = "model"
+    kv = NamedSharding(mesh, P(*spec))
+    return type(cache)(k=kv, v=kv, length=NamedSharding(mesh, P()))

@@ -11,7 +11,6 @@ range's slice is padded to the uniform per-device edge capacity.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
 
 import numpy as np
 
@@ -38,9 +37,31 @@ class PartitionedGraph:
         return self.src.shape[1]
 
 
+def vertices_per_shard(num_vertices: int, model_shards: int,
+                       window: int = 512) -> int:
+    """dst-range length per ``model`` shard, rounded up to ``window``.
+
+    Single source of truth for the vertex layout: partition_graph,
+    dist.pagerank_dist.distributed_input_specs and the dist engine all
+    derive the padded vertex count ``v_per * model_shards`` from here.
+    """
+    v_per = -(-num_vertices // model_shards)          # ceil
+    return -(-v_per // window) * window
+
+
+def edges_per_device(edge_capacity: int, model_shards: int,
+                     edge_shards: int, lane: int = 128) -> int:
+    """Balanced per-device edge-slot estimate for abstract lowering and for
+    pre-sizing the streaming engine (the skew-worst-case is E_cap per dst
+    range; partition_graph grows e_dev beyond this floor when needed)."""
+    e_dev = -(-edge_capacity // max(1, model_shards * edge_shards))
+    return max(lane, -(-e_dev // lane) * lane)
+
+
 def partition_graph(graph: EdgeListGraph, model_shards: int,
                     edge_shards: int, balance_by_active: np.ndarray = None,
-                    window: int = 512) -> PartitionedGraph:
+                    window: int = 512,
+                    min_edges_per_device: int = 0) -> PartitionedGraph:
     """dst-range × edge-stripe partition.
 
     ``balance_by_active``: optional bool[E_cap] — when given (straggler
@@ -49,10 +70,14 @@ def partition_graph(graph: EdgeListGraph, model_shards: int,
 
     ``window``: v_per_shard is rounded up to a multiple of this so the
     frontier-compressed collective path can treat ranks as whole windows.
+
+    ``min_edges_per_device``: floor for the per-device edge capacity — the
+    streaming engine passes a capacity-derived floor so the partition
+    shape (and hence the compiled shard_map program) is stable across
+    batches of a temporal stream.
     """
     V = graph.num_vertices
-    v_per = -(-V // model_shards)            # ceil
-    v_per = -(-v_per // window) * window
+    v_per = vertices_per_shard(V, model_shards, window)
     src = np.asarray(graph.src)
     dst = np.asarray(graph.dst)
     valid = np.asarray(graph.valid)
@@ -71,6 +96,7 @@ def partition_graph(graph: EdgeListGraph, model_shards: int,
     e_dev = -(-e_dev // edge_shards)
     # round up to lane multiple for TPU-friendly layouts
     e_dev = -(-e_dev // 128) * 128
+    e_dev = max(e_dev, min_edges_per_device)
 
     S = np.zeros((model_shards, edge_shards, e_dev), np.int32)
     D = np.zeros((model_shards, edge_shards, e_dev), np.int32)

@@ -30,7 +30,6 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -15,12 +15,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_test_mesh(devices: int = 8):
-    """Small mesh for CI-scale shard_map tests (2×data × model)."""
-    model = 2
+    """Small mesh for CI-scale shard_map tests (data × model, model=2).
+
+    Degrades to model=1 on odd/single-device hosts so the CLI ``--mesh``
+    path stays runnable without forced device counts.
+    """
+    model = 2 if devices >= 2 and devices % 2 == 0 else 1
     data = devices // model
     return jax.make_mesh((data, model), ("data", "model"))
 
 
-def data_axes(mesh) -> tuple:
-    """The batch/edge-parallel axes of a mesh ('pod' included when present)."""
-    return tuple(a for a in mesh.axis_names if a != "model")
+# canonical impl lives in the dist layer (repro.dist.sharding.data_axes):
+# "the batch/edge-parallel axes of a mesh ('pod' included when present)"
+from repro.dist.sharding import data_axes  # noqa: E402,F401

@@ -24,6 +24,20 @@ from repro.ft.checkpoint import CheckpointManager
 from repro.graph.dynamic import apply_batch, make_batch_update
 from repro.graph.generators import TemporalStream
 from repro.graph.structure import from_coo
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+
+
+def _resolve_mesh(name: str):
+    """--mesh none|test|production -> jax Mesh (or None for single-device).
+
+    ``test`` sizes itself to the visible devices (force more with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU).
+    """
+    if name == "none":
+        return None
+    if name == "test":
+        return make_test_mesh(len(jax.devices()))
+    return make_production_mesh()
 
 
 def main(argv=None):
@@ -36,8 +50,15 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="/tmp/repro_pr_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=5)
     ap.add_argument("--check-error", action="store_true")
+    ap.add_argument("--mesh", choices=["none", "test", "production"],
+                    default="none",
+                    help="replay the stream on a multi-device mesh via the "
+                         "shard_map engine (repro.dist.pagerank_dist)")
     args = ap.parse_args(argv)
 
+    mesh = _resolve_mesh(args.mesh)
+    if mesh is not None:
+        print(f"mesh {dict(mesh.shape)} over {len(jax.devices())} devices")
     ds = load_temporal(args.dataset)
     print(f"dataset {ds.name}: |V|={ds.num_vertices:,} "
           f"|E_T|={len(ds.edges):,} synthetic={ds.synthetic}")
@@ -50,7 +71,7 @@ def main(argv=None):
     print(f"preloaded {int(graph.num_valid_edges()):,} static edges; "
           f"{stream.num_batches} batches of {stream.batch_size}")
 
-    res = update_pagerank(graph, graph, None, None, "static")
+    res = update_pagerank(graph, graph, None, None, "static", mesh=mesh)
     ranks = res.ranks
     mgr = CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
     state_t = dict(ranks=jax.ShapeDtypeStruct((ds.num_vertices,),
@@ -72,7 +93,8 @@ def main(argv=None):
                                 max(8, stream.batch_size))
         t0 = time.perf_counter()
         graph_new = apply_batch(graph, upd)
-        r = update_pagerank(graph, graph_new, upd, ranks, args.method)
+        r = update_pagerank(graph, graph_new, upd, ranks, args.method,
+                            mesh=mesh)
         jax.block_until_ready(r.ranks)
         dt = time.perf_counter() - t0
         msg = (f"batch {i:3d}: {dt*1e3:7.1f} ms  iters={int(r.iterations):3d}"

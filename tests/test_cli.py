@@ -6,11 +6,14 @@ import sys
 import pytest
 
 
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
 def _run(args, timeout=420):
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     r = subprocess.run([sys.executable] + args, capture_output=True,
-                       text=True, env=env, cwd="/root/repo",
+                       text=True, env=env, cwd=_REPO,
                        timeout=timeout)
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
     return r.stdout

@@ -33,8 +33,9 @@ def test_int8_psum_bound_and_wire_dtype():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     env.pop("XLA_FLAGS", None)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                        capture_output=True, text=True, env=env,
-                       cwd="/root/repo", timeout=420)
+                       cwd=repo, timeout=420)
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
     assert "OK" in r.stdout

@@ -1,0 +1,86 @@
+"""Property-style tests for graph.dynamic.apply_batch against a host-side
+set-of-edges oracle (no hypothesis dependency — seeded numpy generators).
+
+Each trial replays a chain of interleaved insert/delete batches that
+deliberately include duplicate inserts (within a batch and of live edges)
+and deletes of absent edges; after every batch the device graph's
+``valid``/``num_edges`` must realise exactly (E \\ del) | ins as a set.
+"""
+import numpy as np
+import pytest
+
+from repro.graph.dynamic import apply_batch, make_batch_update
+from repro.graph.structure import from_coo
+
+N = 32
+
+
+def _edge_set(g):
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    valid = np.asarray(g.valid)
+    return set(zip(src[valid].tolist(), dst[valid].tolist()))
+
+
+def _random_edges(rng, k):
+    e = rng.integers(0, N, size=(k, 2))
+    return e[e[:, 0] != e[:, 1]]          # self-loops are implicit
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_apply_batch_chain_matches_set_oracle(seed):
+    rng = np.random.default_rng(seed)
+    init = np.unique(_random_edges(rng, 40), axis=0)
+    g = from_coo(init[:, 0], init[:, 1], N, edge_capacity=len(init) + 64)
+    oracle = set(map(tuple, init.tolist()))
+
+    for step in range(6):
+        live = np.asarray(sorted(oracle), np.int32).reshape(-1, 2)
+        n_del = int(rng.integers(0, 5))
+        dels = []
+        if len(live) and n_del:
+            picks = rng.choice(len(live), size=min(n_del, len(live)),
+                               replace=False)
+            dels.extend(map(tuple, live[picks].tolist()))
+        # deletes of absent edges must be no-ops
+        dels.extend(map(tuple, _random_edges(rng, 2).tolist()))
+        ins = list(map(tuple, _random_edges(rng, 6).tolist()))
+        # duplicate inserts: repeat within the batch and re-insert live edges
+        if ins:
+            ins.append(ins[0])
+        if len(live):
+            ins.append(tuple(live[int(rng.integers(len(live)))].tolist()))
+
+        dels_a = np.asarray(dels, np.int32).reshape(-1, 2)
+        ins_a = np.asarray(ins, np.int32).reshape(-1, 2)
+        upd = make_batch_update(dels_a, ins_a, max(8, len(dels_a)),
+                                max(8, len(ins_a)))
+        g = apply_batch(g, upd)
+        oracle = (oracle - set(dels)) | set(ins)
+
+        got = _edge_set(g)
+        assert got == oracle, (step, got ^ oracle)
+        assert int(np.asarray(g.num_edges)) == len(oracle)
+        assert int(np.asarray(g.valid).sum()) == len(oracle)
+
+
+def test_apply_batch_duplicate_insert_within_batch_claims_one_slot():
+    g = from_coo(np.array([0]), np.array([1]), N, edge_capacity=8)
+    upd = make_batch_update(np.zeros((0, 2), np.int32),
+                            np.array([[2, 3], [2, 3], [2, 3]], np.int32),
+                            4, 4)
+    g2 = apply_batch(g, upd)
+    assert _edge_set(g2) == {(0, 1), (2, 3)}
+    assert int(np.asarray(g2.num_edges)) == 2
+
+
+def test_apply_batch_delete_then_reinsert_reuses_capacity():
+    e = np.array([[0, 1], [1, 2], [2, 3]], np.int32)
+    g = from_coo(e[:, 0], e[:, 1], N, edge_capacity=4)  # only 1 free slot
+    for _ in range(5):                     # would overflow without slot reuse
+        g = apply_batch(g, make_batch_update(
+            np.array([[1, 2]], np.int32), np.zeros((0, 2), np.int32), 4, 4))
+        g = apply_batch(g, make_batch_update(
+            np.zeros((0, 2), np.int32), np.array([[1, 2]], np.int32), 4, 4))
+    assert _edge_set(g) == {(0, 1), (1, 2), (2, 3)}
+    assert int(np.asarray(g.num_edges)) == 3
