@@ -27,7 +27,14 @@ def time_fn(fn: Callable, *args, repeats: int = 3, **kw) -> tuple:
     return best, out
 
 
+# every emit() is also recorded here so run.py --json can write the full
+# result set machine-readably (perf-trajectory tracking across PRs)
+RESULTS: list = []
+
+
 def emit(name: str, seconds: float, derived: str = ""):
+    RESULTS.append(dict(name=name, us_per_call=seconds * 1e6,
+                        derived=derived))
     print(f"{name},{seconds*1e6:.1f},{derived}")
 
 

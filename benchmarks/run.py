@@ -1,17 +1,31 @@
-"""Benchmark driver: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows."""
+"""Benchmark driver: one module per paper table/figure (+ serving).
+Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` also writes
+the full result set as ``{name: {us_per_call, derived}}`` so the perf
+trajectory is recorded machine-readably (e.g. BENCH_serving.json).
+
+    PYTHONPATH=src:. python benchmarks/run.py [filter] [--json PATH]
+"""
 from __future__ import annotations
 
-import sys
+import argparse
+import json
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("only", nargs="?", default=None,
+                    help="substring filter on the module table names")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write results as JSON {name: {us_per_call, "
+                         "derived}} to this path")
+    args = ap.parse_args(argv)
+
     t0 = time.time()
     from benchmarks import (bench_affected, bench_dynamic_stream,
                             bench_frontier_tolerance, bench_kernel,
                             bench_prune_tolerance, bench_random_updates,
-                            bench_scaling)
+                            bench_scaling, bench_serving, common)
     print("name,us_per_call,derived")
     mods = [
         ("fig2_frontier_tolerance", bench_frontier_tolerance),
@@ -21,14 +35,22 @@ def main() -> None:
         ("fig6_scaling", bench_scaling),
         ("fig12_random_updates", bench_random_updates),
         ("kernel_gated_spmv", bench_kernel),
+        ("bench_serving", bench_serving),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
     for name, mod in mods:
-        if only and only not in name:
+        if args.only and args.only not in name:
             continue
         print(f"# --- {name} ---", flush=True)
         mod.run()
     print(f"# total {time.time()-t0:.0f}s")
+
+    if args.json_path:
+        out = {r["name"]: dict(us_per_call=r["us_per_call"],
+                               derived=r["derived"])
+               for r in common.RESULTS}
+        with open(args.json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        print(f"# wrote {len(out)} results to {args.json_path}")
 
 
 if __name__ == "__main__":

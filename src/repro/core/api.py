@@ -19,10 +19,58 @@ Method = Literal["static", "naive", "traversal", "frontier", "frontier_prune"]
 
 METHODS = ("static", "naive", "traversal", "frontier", "frontier_prune")
 
+# per-method flags for the one `_pagerank_loop` behind all five approaches
+# (core/pagerank.py docstring table); shared by the single-device path and
+# the serve engine (repro.serve.engine).
+LOOP_FLAGS = {
+    "static": dict(track_affected=False),
+    "naive": dict(track_affected=False),
+    "traversal": dict(),
+    "frontier": dict(expand=True),
+    "frontier_prune": dict(expand=True, prune=True, closed_form=True),
+}
+
 # one compiled distributed engine per (mesh, graph shape, method options);
 # FIFO-bounded so shape sweeps don't pin compiled executables forever
 _DIST_ENGINES: dict = {}
 _DIST_ENGINES_MAX = 8
+
+
+def build_initial_state(graph_prev: EdgeListGraph,
+                        graph_new: EdgeListGraph,
+                        update: Optional[BatchUpdate],
+                        prev_ranks: Optional[jax.Array],
+                        method: Method) -> tuple:
+    """Method → (init_ranks, init_affected): the paper's per-approach
+    preprocessing (Alg.1 lines 1-6), shared by every engine.
+
+    * ``static``          — cold start 1/|V|, everything affected;
+    * ``naive``           — warm start, everything affected;
+    * ``traversal``       — warm start, BFS-reachable from Δ endpoints;
+    * ``frontier*``       — warm start, Δ endpoints + their out-neighbours
+                            in Gᵗ⁻¹ ∪ Gᵗ.
+
+    Callers: ``update_pagerank`` (single device), ``distributed_pagerank``
+    (mesh) and the online serve loop (repro.serve.engine), which also uses
+    |init_affected|/|V| as its static-fallback signal.
+    """
+    V = graph_new.num_vertices
+    if method == "static":
+        return jnp.full((V,), 1.0 / V, jnp.float64), jnp.ones((V,), bool)
+    if prev_ranks is None:
+        raise ValueError(f"method {method!r} needs prev_ranks")
+    if method == "naive":
+        return prev_ranks, jnp.ones((V,), bool)
+    if update is None:
+        raise ValueError(f"method {method!r} needs the batch update")
+    touched = touched_vertices_mask(update, V)
+    if method == "traversal":
+        return prev_ranks, pr.reachability_mask(graph_prev, graph_new,
+                                                touched)
+    if method in ("frontier", "frontier_prune"):
+        return prev_ranks, pr.initial_affected(graph_prev, graph_new,
+                                               touched)
+    raise ValueError(f"unknown method {method!r}")
 
 
 def distributed_pagerank(graph_prev: EdgeListGraph,
@@ -31,39 +79,23 @@ def distributed_pagerank(graph_prev: EdgeListGraph,
                          prev_ranks: Optional[jax.Array],
                          method: Method,
                          mesh,
+                         init_state: Optional[tuple] = None,
                          **kw) -> pr.PageRankResult:
     """``update_pagerank`` on a multi-device mesh via the shard_map engine.
 
     Same method semantics as the single-device path: the initial affected
-    set is built per approach, then the DF (or DF-P, for
-    ``frontier_prune``) distributed iteration runs to the shared fixed
-    point.  Engines are cached per (mesh, shape, options) so a temporal
-    stream compiles once.
+    set is built per approach (or taken from ``init_state`` when the
+    caller already ran ``build_initial_state``, e.g. the serve engine's
+    fallback check), then the DF (or DF-P, for ``frontier_prune``)
+    distributed iteration runs to the shared fixed point.  Engines are
+    cached per (mesh, shape, options) so a temporal stream compiles once.
     """
     from repro.dist.pagerank_dist import DistributedEngine
 
     V = graph_new.num_vertices
-    if method == "static":
-        ranks = jnp.full((V,), 1.0 / V, jnp.float64)
-        affected = jnp.ones((V,), bool)
-    else:
-        if prev_ranks is None:
-            raise ValueError(f"method {method!r} needs prev_ranks")
-        ranks = prev_ranks
-        if method == "naive":
-            affected = jnp.ones((V,), bool)
-        else:
-            if update is None:
-                raise ValueError(f"method {method!r} needs the batch update")
-            touched = touched_vertices_mask(update, V)
-            if method == "traversal":
-                affected = pr.reachability_mask(graph_prev, graph_new,
-                                                touched)
-            elif method in ("frontier", "frontier_prune"):
-                affected = pr.initial_affected(graph_prev, graph_new,
-                                               touched)
-            else:
-                raise ValueError(f"unknown method {method!r}")
+    ranks, affected = (init_state if init_state is not None else
+                       build_initial_state(graph_prev, graph_new, update,
+                                           prev_ranks, method))
     prune = method == "frontier_prune"
     key = (mesh, V, graph_new.edge_capacity, prune,
            tuple(sorted(kw.items())))
@@ -93,25 +125,10 @@ def update_pagerank(graph_prev: EdgeListGraph,
     if mesh is not None:
         return distributed_pagerank(graph_prev, graph_new, update,
                                     prev_ranks, method, mesh, **kw)
-    if method == "static":
-        return pr.static_pagerank(graph_new, **kw)
-    if prev_ranks is None:
-        raise ValueError(f"method {method!r} needs prev_ranks")
-    if method == "naive":
-        return pr.naive_dynamic_pagerank(graph_new, prev_ranks, **kw)
-    if update is None:
-        raise ValueError(f"method {method!r} needs the batch update")
-    touched = touched_vertices_mask(update, graph_new.num_vertices)
-    if method == "traversal":
-        return pr.dynamic_traversal_pagerank(
-            graph_prev, graph_new, touched, prev_ranks, **kw)
-    if method == "frontier":
-        return pr.dynamic_frontier_pagerank(
-            graph_prev, graph_new, touched, prev_ranks, **kw)
-    if method == "frontier_prune":
-        return pr.dynamic_frontier_prune_pagerank(
-            graph_prev, graph_new, touched, prev_ranks, **kw)
-    raise ValueError(f"unknown method {method!r}")
+    init_ranks, init_affected = build_initial_state(
+        graph_prev, graph_new, update, prev_ranks, method)
+    return pr._pagerank_loop(graph_new, init_ranks, init_affected,
+                             **LOOP_FLAGS[method], **kw)
 
 
 def step_stream(graph: EdgeListGraph, update: BatchUpdate,

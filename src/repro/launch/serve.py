@@ -1,0 +1,146 @@
+"""Online rank-serving driver: replay a SNAP temporal stream as a timed
+event feed against the repro.serve service, interleaving rank queries.
+
+The first 90% of the temporal edges preload G⁰ (paper §5.1.4); the rest
+arrive one event at a time through the ingest queue (optionally paced at
+``--rate`` events/s), the engine micro-batches them, and every
+``--query-every`` events a query burst (point ranks + top-k) is served
+from the current snapshot.  Prints the metrics summary and ``serve
+complete``; exits non-zero if fewer than ``--min-queries`` queries were
+served (CI smoke contract).
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --dataset sx-mathoverflow --events 5000
+
+With ``--ckpt-dir``, (ranks, generation, last_seq) checkpoints are
+written every ``--ckpt-every`` generations; on restart the driver
+replays events [0, last_seq] into the graph and resumes the feed from
+there — same replay-from-stream contract as launch/pagerank.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import repro  # noqa: F401
+from repro.core.api import METHODS
+from repro.data.snap import PAPER_TABLE1, load_temporal
+from repro.graph.dynamic import apply_batch, make_batch_update
+from repro.launch.pagerank import _resolve_mesh
+from repro.serve import IngestQueue, QueryClient, RankStore, ServeEngine, \
+    ServeMetrics, preload_graph_and_feed
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="sx-mathoverflow",
+                    choices=list(PAPER_TABLE1))
+    ap.add_argument("--method", default="frontier_prune", choices=METHODS)
+    ap.add_argument("--events", type=int, default=5000,
+                    help="number of post-preload edge events to feed")
+    ap.add_argument("--flush-size", type=int, default=64)
+    ap.add_argument("--flush-interval-ms", type=float, default=50.0)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="event feed pacing in events/s (0 = unpaced)")
+    ap.add_argument("--query-every", type=int, default=100,
+                    help="issue a query burst every K submitted events")
+    ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--static-fallback-frac", type=float, default=0.25)
+    ap.add_argument("--mesh", choices=["none", "test", "production"],
+                    default="none")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50,
+                    help="checkpoint every K generations (with --ckpt-dir)")
+    ap.add_argument("--min-queries", type=int, default=0,
+                    help="exit non-zero unless this many queries were served")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    mesh = _resolve_mesh(args.mesh)
+    ds = load_temporal(args.dataset)
+    graph, events = preload_graph_and_feed(ds, args.events)
+    print(f"dataset {ds.name}: |V|={ds.num_vertices:,} preload="
+          f"{int(graph.num_valid_edges()):,} events={len(events):,} "
+          f"method={args.method} flush={args.flush_size}"
+          f"/{args.flush_interval_ms:g}ms")
+
+    metrics = ServeMetrics()
+    store = RankStore(ckpt_dir=args.ckpt_dir or None,
+                      ckpt_every=args.ckpt_every)
+    restored = store.restore_latest(ds.num_vertices) if args.ckpt_dir \
+        else None
+    start_event = 0
+    if restored is not None:
+        ranks, gen, last_seq = restored
+        start_event = last_seq + 1
+        if start_event > len(events):
+            # the checkpointed ranks reflect events this run's feed does
+            # not contain — replaying a truncated prefix would publish a
+            # graph inconsistent with the restored ranks/last_seq
+            print(f"FAIL: checkpoint last_seq={last_seq} exceeds the "
+                  f"--events {args.events} feed; rerun with --events > "
+                  f"{last_seq} (or a fresh --ckpt-dir)")
+            return 1
+        store.seed_generation(gen)             # gen clock survives restart
+        if start_event > 0:         # replay the already-served prefix
+            replay = events[:start_event]
+            graph = apply_batch(graph, make_batch_update(
+                np.zeros((0, 2)), replay, 8, max(8, len(replay))))
+        print(f"restored generation {gen}; replayed {start_event} events")
+    ingest = IngestQueue(flush_size=args.flush_size,
+                         flush_interval=args.flush_interval_ms * 1e-3,
+                         start_seq=start_event)
+    engine = ServeEngine(graph, ingest, store, metrics=metrics,
+                         method=args.method, mesh=mesh,
+                         static_fallback_frac=args.static_fallback_frac)
+    if restored is not None:
+        engine.bootstrap(ranks=restored[0], last_seq=start_event - 1)
+    else:
+        engine.bootstrap()
+    client = QueryClient(store, ingest, metrics)
+    rng = np.random.default_rng(args.seed)
+
+    t0 = time.perf_counter()
+    next_due = t0
+    for i in range(start_event, len(events)):
+        if args.rate > 0:                     # timed feed
+            next_due += 1.0 / args.rate
+            lag = next_due - time.perf_counter()
+            if lag > 0:
+                time.sleep(lag)
+        u, v = int(events[i, 0]), int(events[i, 1])
+        metrics.record_admission(ingest.submit_insert(u, v) is not None)
+        engine.step()                          # flush when size/deadline hit
+        if args.query_every and (i + 1) % args.query_every == 0:
+            verts = rng.integers(0, ds.num_vertices, size=4)
+            client.get_ranks(verts)
+            r = client.top_k(args.topk)
+            print(f"event {i + 1:6d}: gen={r.generation:5d} "
+                  f"stale={r.staleness_events:4d}ev "
+                  f"top1={r.vertices[0]} ({r.ranks[0]:.3e})", flush=True)
+    engine.drain()
+    wall = time.perf_counter() - t0
+
+    m = metrics.as_dict()
+    m["wall_s"] = wall
+    m["feed_events_per_s"] = (len(events) - start_event) / wall \
+        if wall > 0 else 0.0
+    snap = store.snapshot()
+    print("metrics " + json.dumps(
+        {k: (round(v, 3) if isinstance(v, float) else v)
+         for k, v in m.items()}))
+    print(f"final generation {snap.generation}, last_seq {snap.last_seq}, "
+          f"queries served {m['queries_served']}")
+    print("serve complete")
+    if m["queries_served"] < args.min_queries:
+        print(f"FAIL: served {m['queries_served']} < --min-queries "
+              f"{args.min_queries}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,25 @@
+"""repro.serve — online rank serving on the DF/DF-P engines.
+
+The paper makes rank *maintenance* cheap enough to run continuously as
+edges arrive; this package supplies the missing front end: an event
+queue that coalesces edge events into capacity-padded micro-batches
+(``ingest``), a double-buffered snapshot store so queries never block on
+an in-flight update (``state``), the update loop driving the DF/DF-P
+engines with an automatic static fallback at large batch fractions
+(``engine``), the query surface — point ranks, jit top-k, personalized
+top-k (``query``) — and per-batch latency/freshness/work counters
+(``metrics``).  See DESIGN.md §5 for the architecture.
+"""
+from repro.serve.engine import ServeEngine
+from repro.serve.ingest import CoalescedBatch, EdgeEvent, IngestQueue, \
+    coalesce_events
+from repro.serve.metrics import ServeMetrics
+from repro.serve.query import QueryClient
+from repro.serve.replay import preload_graph_and_feed
+from repro.serve.state import RankStore, Snapshot
+
+__all__ = [
+    "CoalescedBatch", "EdgeEvent", "IngestQueue", "coalesce_events",
+    "QueryClient", "RankStore", "ServeEngine", "ServeMetrics", "Snapshot",
+    "preload_graph_and_feed",
+]

@@ -1,0 +1,151 @@
+"""The serve-loop engine: micro-batch in, snapshot out.
+
+One ``step`` = poll the ingest queue for a coalesced micro-batch, apply
+it (``apply_batch``), build the method's initial affected set via the
+shared ``core.api.build_initial_state`` dispatch, run the DF/DF-P loop,
+publish the new (graph, ranks, generation) snapshot.  The step is
+synchronous and single-consumer; ``start``/``stop`` wrap it in a daemon
+thread for online operation, while tests and benchmarks drive ``step``
+directly for determinism.
+
+Static fallback (paper §5.2.2 observation: DF/DF-P lose to Static once
+the affected fraction is large): when the *initial* affected set of the
+chosen dynamic method covers more than ``static_fallback_frac`` of the
+vertices, the step reruns from a cold start instead — same fixed point,
+less work at very large coalesced batches.  The initial affected set is
+a cheap one-hop (frontier) or reachability (traversal) mask we need
+anyway, so the decision adds no extra passes for frontier methods.
+
+``mesh=`` routes the rank update through the distributed shard_map
+engine (repro.dist) — ingest/snapshot/query stay host-side either way.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pagerank as pr
+from repro.core.api import LOOP_FLAGS, Method, build_initial_state, \
+    distributed_pagerank
+from repro.graph.dynamic import apply_batch
+from repro.graph.structure import EdgeListGraph
+from repro.serve.ingest import IngestQueue
+from repro.serve.metrics import ServeMetrics
+from repro.serve.state import RankStore
+
+DYNAMIC_METHODS = ("naive", "traversal", "frontier", "frontier_prune")
+
+
+class ServeEngine:
+    def __init__(self, graph: EdgeListGraph, ingest: IngestQueue,
+                 store: RankStore, metrics: Optional[ServeMetrics] = None,
+                 method: Method = "frontier_prune", mesh=None,
+                 static_fallback_frac: float = 0.25,
+                 clock=time.monotonic, **pr_kw):
+        self.ingest = ingest
+        self.store = store
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        self.method = method
+        self.mesh = mesh
+        self.static_fallback_frac = static_fallback_frac
+        self.pr_kw = pr_kw
+        self._clock = clock
+        self._graph = graph
+        self._ranks: Optional[jax.Array] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # ---- lifecycle -------------------------------------------------------
+    def bootstrap(self, ranks: Optional[jax.Array] = None,
+                  last_seq: Optional[int] = None) -> int:
+        """Publish generation 0: a cold static solve, or restored ranks."""
+        if ranks is None:
+            ranks = self._solve("static", self._graph, None, None).ranks
+        self._ranks = ranks
+        seq = self.ingest.start_seq - 1 if last_seq is None else last_seq
+        return self.store.publish(self._graph, ranks, seq)
+
+    # ---- one micro-batch -------------------------------------------------
+    def step(self, force: bool = False) -> bool:
+        """Apply one coalesced micro-batch if due; True if work was done."""
+        if self._ranks is None:
+            raise RuntimeError("bootstrap() before step()")
+        batch = self.ingest.poll(force=force)
+        if batch is None:
+            return False
+        t0 = self._clock()
+        graph_new = apply_batch(self._graph, batch.update)
+        method = self.method
+        init_state = build_initial_state(self._graph, graph_new,
+                                         batch.update, self._ranks, method)
+        affected = init_state[1]
+        fallback = False
+        if method in ("traversal", "frontier", "frontier_prune"):
+            frac = float(jnp.mean(affected.astype(jnp.float64)))
+            if frac > self.static_fallback_frac:
+                method, fallback = "static", True
+                init_state = build_initial_state(
+                    self._graph, graph_new, batch.update, self._ranks,
+                    "static")
+        res = self._solve(method, graph_new, batch.update, self._ranks,
+                          graph_prev=self._graph, init_state=init_state)
+        jax.block_until_ready(res.ranks)
+        latency = self._clock() - t0
+        self._graph, self._ranks = graph_new, res.ranks
+        self.store.publish(graph_new, res.ranks, batch.last_seq)
+        self.metrics.record_batch(
+            latency, batch.num_events, batch.num_coalesced,
+            affected=int(jnp.sum(res.affected_ever)),
+            iterations=int(res.iterations), fallback=fallback)
+        return True
+
+    def _solve(self, method: Method, graph_new: EdgeListGraph, update,
+               prev_ranks, graph_prev: Optional[EdgeListGraph] = None,
+               init_state: Optional[tuple] = None):
+        graph_prev = graph_prev if graph_prev is not None else graph_new
+        if self.mesh is not None:
+            return distributed_pagerank(graph_prev, graph_new, update,
+                                        prev_ranks, method, self.mesh,
+                                        init_state=init_state,
+                                        **self.pr_kw)
+        init_ranks, init_affected = (
+            init_state if init_state is not None else build_initial_state(
+                graph_prev, graph_new, update, prev_ranks, method))
+        return pr._pagerank_loop(graph_new, init_ranks, init_affected,
+                                 **LOOP_FLAGS[method], **self.pr_kw)
+
+    def drain(self, force: bool = True) -> int:
+        """Run steps until the ingest queue is empty; returns batch count."""
+        n = 0
+        while self.step(force=force):
+            n += 1
+        return n
+
+    # ---- background thread ----------------------------------------------
+    def start(self, idle_sleep: float = 0.001):
+        """Run the step loop in a daemon thread until ``stop``."""
+        if self._thread is not None:
+            raise RuntimeError("engine already started")
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if not self.step():
+                    time.sleep(idle_sleep)
+
+        self._thread = threading.Thread(target=loop, name="serve-engine",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self, drain: bool = True):
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+        if drain:
+            self.drain(force=True)

@@ -1,0 +1,102 @@
+"""Serving counters: update latency, query-visible staleness, work.
+
+Everything is recorded host-side (plain floats/ints appended to lists)
+so the hot path never syncs the device beyond what the engine already
+does, and ``as_dict`` reduces to the numbers the bench harness and the
+CLI report:
+
+  * ``update_latency_{p50,p99}_ms`` — wall time of one engine step
+    (apply_batch + rank update + publish);
+  * ``staleness_{p50,p99}_events`` — at each query, how many accepted
+    events the served snapshot is behind the newest submitted one
+    (freshness in *events*, the unit the paper's batch fractions use);
+  * ``events_per_s`` — applied events over the span between the first
+    and last completed batch;
+  * ``affected_mean`` / ``iterations_mean`` — per-batch |affected| and
+    solver iterations (the paper's work proxies);
+  * admission/fallback/coalescing counters.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+class ServeMetrics:
+    def __init__(self, clock=time.monotonic):
+        self._clock = clock
+        # per-batch
+        self.update_latency_s: List[float] = []
+        self.batch_events: List[int] = []
+        self.batch_affected: List[int] = []
+        self.batch_iterations: List[int] = []
+        self.events_applied = 0
+        self.events_coalesced = 0
+        self.static_fallbacks = 0
+        self._t_first_batch = None
+        self._t_last_batch = None
+        # queries
+        self.query_staleness: List[int] = []
+        self.queries_served = 0
+        # admission
+        self.accepted = 0
+        self.rejected = 0
+
+    # ---- recording -------------------------------------------------------
+    def record_admission(self, accepted: bool):
+        if accepted:
+            self.accepted += 1
+        else:
+            self.rejected += 1
+
+    def record_batch(self, latency_s: float, num_events: int,
+                     num_coalesced: int, affected: int, iterations: int,
+                     fallback: bool):
+        now = self._clock()
+        if self._t_first_batch is None:
+            self._t_first_batch = now
+        self._t_last_batch = now
+        self.update_latency_s.append(float(latency_s))
+        self.batch_events.append(int(num_events))
+        self.batch_affected.append(int(affected))
+        self.batch_iterations.append(int(iterations))
+        self.events_applied += int(num_events)
+        self.events_coalesced += int(num_coalesced)
+        if fallback:
+            self.static_fallbacks += 1
+
+    def record_query(self, staleness_events: int):
+        self.queries_served += 1
+        self.query_staleness.append(int(staleness_events))
+
+    # ---- reduction -------------------------------------------------------
+    def as_dict(self) -> dict:
+        lat = self.update_latency_s
+        span = ((self._t_last_batch - self._t_first_batch)
+                if self._t_first_batch is not None else 0.0)
+        # events/s needs a span; a single batch contributes its own latency
+        denom = span if span > 0 else (lat[0] if lat else 0.0)
+        return dict(
+            batches=len(lat),
+            events_applied=self.events_applied,
+            events_coalesced=self.events_coalesced,
+            events_per_s=(self.events_applied / denom) if denom > 0 else 0.0,
+            update_latency_p50_ms=_pct(lat, 50) * 1e3,
+            update_latency_p99_ms=_pct(lat, 99) * 1e3,
+            staleness_p50_events=_pct(self.query_staleness, 50),
+            staleness_p99_events=_pct(self.query_staleness, 99),
+            queries_served=self.queries_served,
+            affected_mean=(float(np.mean(self.batch_affected))
+                           if self.batch_affected else 0.0),
+            iterations_mean=(float(np.mean(self.batch_iterations))
+                             if self.batch_iterations else 0.0),
+            static_fallbacks=self.static_fallbacks,
+            admission_accepted=self.accepted,
+            admission_rejected=self.rejected,
+        )

@@ -1,0 +1,94 @@
+"""Query surface over the front snapshot: point ranks, top-k, PPR top-k.
+
+Every query reads ONE atomically-published ``Snapshot`` — the (graph,
+ranks, generation) triple is consistent by construction (state.py), and
+the answer carries the generation it was served from.  Staleness is
+measured in *events*: how many accepted ingest events the snapshot's
+``last_seq`` trails the newest submitted seq at query time.
+
+``top_k`` is jit-compiled (``jax.lax.top_k``) and cached per k, so the
+hot query path is one compiled executable on the already-device-resident
+rank vector.  ``personalized_top_k`` routes through
+``core.extensions.personalized_pagerank`` on the snapshot graph — a
+full PPR solve from the seed set, i.e. a heavyweight analytical query
+served from the same consistent snapshot (cap ``max_iter`` to trade
+accuracy for latency).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.extensions import personalized_pagerank
+from repro.serve.ingest import IngestQueue
+from repro.serve.metrics import ServeMetrics
+from repro.serve.state import RankStore
+
+
+class QueryResult(NamedTuple):
+    vertices: np.ndarray   # int64[k]
+    ranks: np.ndarray      # f64[k]
+    generation: int
+    staleness_events: int
+
+
+class QueryClient:
+    def __init__(self, store: RankStore, ingest: Optional[IngestQueue] = None,
+                 metrics: Optional[ServeMetrics] = None):
+        self.store = store
+        self.ingest = ingest
+        self.metrics = metrics
+        self._topk_fns: dict = {}
+
+    def _staleness(self, snap) -> int:
+        if self.ingest is None:
+            return 0
+        return max(0, self.ingest.latest_seq - snap.last_seq)
+
+    def _record(self, staleness: int):
+        if self.metrics is not None:
+            self.metrics.record_query(staleness)
+
+    # ---- queries ---------------------------------------------------------
+    def get_ranks(self, vertices: Sequence[int]) -> QueryResult:
+        """Point lookups of the current ranks for the given vertices."""
+        snap = self.store.snapshot()
+        verts = np.asarray(vertices, np.int64).reshape(-1)
+        stale = self._staleness(snap)
+        self._record(stale)
+        return QueryResult(verts, np.asarray(snap.ranks)[verts],
+                           snap.generation, stale)
+
+    def _topk(self, ranks: jax.Array, k: int):
+        fn = self._topk_fns.get(k)
+        if fn is None:
+            fn = self._topk_fns.setdefault(
+                k, jax.jit(partial(jax.lax.top_k, k=k)))
+        vals, idx = fn(ranks)
+        return np.asarray(idx, np.int64), np.asarray(vals)
+
+    def top_k(self, k: int) -> QueryResult:
+        """The k highest-ranked vertices (jit, cached per k)."""
+        snap = self.store.snapshot()
+        idx, vals = self._topk(snap.ranks, k)
+        stale = self._staleness(snap)
+        self._record(stale)
+        return QueryResult(idx, vals, snap.generation, stale)
+
+    def personalized_top_k(self, seeds: Sequence[int], k: int,
+                           **ppr_kw) -> QueryResult:
+        """Top-k by Personalized PageRank from a seed set, on the snapshot
+        graph (core.extensions)."""
+        snap = self.store.snapshot()
+        V = snap.graph.num_vertices
+        seed_mask = jnp.zeros((V,), bool).at[
+            jnp.asarray(np.asarray(seeds, np.int64))].set(True)
+        res = personalized_pagerank(snap.graph, seed_mask, **ppr_kw)
+        idx, vals = self._topk(res.ranks, k)
+        stale = self._staleness(snap)
+        self._record(stale)
+        return QueryResult(idx, vals, snap.generation, stale)

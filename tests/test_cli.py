@@ -19,6 +19,7 @@ def _run(args, timeout=420):
     return r.stdout
 
 
+@pytest.mark.slow
 def test_pagerank_driver(tmp_path):
     out = _run(["-m", "repro.launch.pagerank", "--dataset",
                 "sx-mathoverflow", "--method", "frontier_prune",
@@ -30,6 +31,7 @@ def test_pagerank_driver(tmp_path):
     assert any(d.startswith("step_") for d in os.listdir(tmp_path))
 
 
+@pytest.mark.slow
 def test_train_driver_restart(tmp_path):
     out1 = _run(["-m", "repro.launch.train", "--arch", "qwen2.5-3b",
                  "--smoke", "--steps", "12", "--batch", "4", "--seq", "32",
@@ -46,3 +48,26 @@ def test_train_driver_restart(tmp_path):
 def test_quickstart_example():
     out = _run(["examples/quickstart.py"])
     assert "frontier_prune" in out
+
+
+@pytest.mark.slow
+def test_serve_driver(tmp_path):
+    out = _run(["-m", "repro.launch.serve", "--dataset", "sx-mathoverflow",
+                "--events", "200", "--flush-size", "32",
+                "--flush-interval-ms", "20", "--query-every", "50",
+                "--min-queries", "1",
+                "--ckpt-dir", str(tmp_path), "--ckpt-every", "2"])
+    assert "serve complete" in out
+    assert "queries served" in out
+    # generations printed at each query burst are monotone non-decreasing
+    gens = [int(line.split("gen=")[1].split()[0])
+            for line in out.splitlines() if "gen=" in line]
+    assert gens and gens == sorted(gens)
+    assert any(d.startswith("step_") for d in os.listdir(tmp_path))
+    # restart resumes the event feed and the generation clock
+    out2 = _run(["-m", "repro.launch.serve", "--dataset", "sx-mathoverflow",
+                 "--events", "300", "--flush-size", "32",
+                 "--flush-interval-ms", "20", "--query-every", "50",
+                 "--ckpt-dir", str(tmp_path), "--ckpt-every", "2"])
+    assert "restored generation" in out2
+    assert "serve complete" in out2

@@ -1,0 +1,341 @@
+"""repro.serve: ingest coalescing, snapshot consistency, streaming
+equivalence, static fallback, queries, checkpoint restart."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.core.api import build_initial_state
+from repro.core.pagerank import static_pagerank
+from repro.core.reference import l1_error
+from repro.graph.dynamic import apply_batch, make_batch_update
+from repro.graph.generators import erdos_renyi_edges
+from repro.graph.structure import from_coo
+from repro.serve import (IngestQueue, QueryClient, RankStore, ServeEngine,
+                         ServeMetrics)
+from repro.serve.ingest import DELETE, INSERT, EdgeEvent, coalesce_events
+
+N = 64
+
+
+def _graph(seed=0, m=400, cap_extra=512):
+    edges, n = erdos_renyi_edges(N, m, seed=seed)
+    return from_coo(edges[:, 0], edges[:, 1], n,
+                    edge_capacity=len(edges) + cap_extra), edges
+
+
+def _service(graph, method="frontier_prune", flush_size=16,
+             flush_interval=0.0, clock=None, **engine_kw):
+    metrics = ServeMetrics()
+    kw = dict(flush_size=flush_size, flush_interval=flush_interval)
+    if clock is not None:
+        kw["clock"] = clock
+    ingest = IngestQueue(**kw)
+    store = RankStore()
+    engine = ServeEngine(graph, ingest, store, metrics=metrics,
+                         method=method, **engine_kw)
+    return ingest, store, engine, metrics
+
+
+# ---------------------------------------------------------------------------
+# ingest: flush policy, admission, coalescing
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_flush_on_size():
+    q = IngestQueue(flush_size=4, flush_interval=1e9)
+    for i in range(3):
+        q.submit(INSERT, i, i + 1)
+    assert q.poll() is None                       # below size, deadline far
+    q.submit(INSERT, 9, 10)
+    b = q.poll()
+    assert b is not None and b.num_events == 4
+    assert (b.first_seq, b.last_seq) == (0, 3)
+    assert q.poll() is None
+
+
+def test_flush_on_deadline():
+    clk = FakeClock()
+    q = IngestQueue(flush_size=100, flush_interval=0.5, clock=clk)
+    q.submit(INSERT, 1, 2)
+    assert q.poll() is None                       # deadline not reached
+    clk.t = 0.6
+    b = q.poll()
+    assert b is not None and b.num_events == 1
+
+
+def test_force_flush_and_empty():
+    q = IngestQueue(flush_size=100, flush_interval=1e9)
+    assert q.poll(force=True) is None
+    q.submit(INSERT, 1, 2)
+    assert q.poll(force=True).num_events == 1
+
+
+def test_admission_control_sheds_load():
+    q = IngestQueue(flush_size=4, flush_interval=1e9, max_pending=6)
+    seqs = [q.submit(INSERT, i, i + 1) for i in range(10)]
+    assert seqs[:6] == list(range(6))
+    assert all(s is None for s in seqs[6:])
+    assert q.rejected == 4
+    assert q.latest_seq == 5                      # rejected events get no seq
+
+
+def test_coalesce_net_effect_last_op_wins():
+    evs = [EdgeEvent(INSERT, 1, 2, 0, 0.0),
+           EdgeEvent(DELETE, 1, 2, 1, 0.0),      # cancels the insert
+           EdgeEvent(DELETE, 3, 4, 2, 0.0),
+           EdgeEvent(INSERT, 3, 4, 3, 0.0),      # delete→insert = insert
+           EdgeEvent(INSERT, 5, 6, 4, 0.0)]
+    b = coalesce_events(evs, 8, 8)
+    assert b.num_events == 5 and b.num_coalesced == 2
+    dels = set(zip(np.asarray(b.update.del_src)[
+        np.asarray(b.update.del_mask)].tolist(),
+        np.asarray(b.update.del_dst)[
+        np.asarray(b.update.del_mask)].tolist()))
+    ins = set(zip(np.asarray(b.update.ins_src)[
+        np.asarray(b.update.ins_mask)].tolist(),
+        np.asarray(b.update.ins_dst)[
+        np.asarray(b.update.ins_mask)].tolist()))
+    assert dels == {(1, 2)}
+    assert ins == {(3, 4), (5, 6)}
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_coalesced_batches_match_per_event_application(seed):
+    """Coalescing must be semantically invisible: applying the coalesced
+    window equals applying the raw events one by one, in order."""
+    rng = np.random.default_rng(seed)
+    g, edges = _graph(seed=seed)
+    live = [tuple(e) for e in edges.tolist()]
+    evs = []
+    for i in range(40):
+        if live and rng.random() < 0.35:
+            u, v = live[int(rng.integers(len(live)))]
+            evs.append(EdgeEvent(DELETE, u, v, i, 0.0))
+        else:
+            u, v = rng.integers(0, N, 2)
+            if u == v:
+                v = (v + 1) % N
+            evs.append(EdgeEvent(INSERT, int(u), int(v), i, 0.0))
+    # one coalesced window
+    g_co = apply_batch(g, coalesce_events(evs, 64, 64).update)
+    # one singleton batch per event, in order
+    g_seq = g
+    for ev in evs:
+        d = np.asarray([[ev.u, ev.v]] if ev.kind == DELETE else
+                       np.zeros((0, 2)), np.int32).reshape(-1, 2)
+        i_ = np.asarray([[ev.u, ev.v]] if ev.kind == INSERT else
+                        np.zeros((0, 2)), np.int32).reshape(-1, 2)
+        g_seq = apply_batch(g_seq, make_batch_update(d, i_, 8, 8))
+
+    def eset(gg):
+        s, d, va = (np.asarray(gg.src), np.asarray(gg.dst),
+                    np.asarray(gg.valid))
+        return set(zip(s[va].tolist(), d[va].tolist()))
+
+    assert eset(g_co) == eset(g_seq)
+
+
+# ---------------------------------------------------------------------------
+# state: snapshot consistency + generation monotonicity
+# ---------------------------------------------------------------------------
+
+def test_generation_monotone_and_snapshot_consistent():
+    g, _ = _graph()
+    ingest, store, engine, _ = _service(g, flush_size=8)
+    engine.bootstrap()
+    rng = np.random.default_rng(1)
+    gens = [store.snapshot().generation]
+    for i in range(30):
+        u, v = rng.integers(0, N, 2)
+        if u != v:
+            ingest.submit(INSERT, int(u), int(v))
+        engine.step(force=(i % 3 == 0))
+        snap = store.snapshot()
+        # consistency: the published (graph, ranks) pair is a fixed point
+        # of each other — |ranks| matches the graph and sums to ~1
+        assert snap.ranks.shape == (snap.graph.num_vertices,)
+        assert abs(float(jnp.sum(snap.ranks)) - 1.0) < 1e-4
+        gens.append(snap.generation)
+    assert gens == sorted(gens)                   # monotone, never reset
+    assert gens[-1] > 0
+
+
+def test_rankstore_checkpoint_restore(tmp_path):
+    g, _ = _graph()
+    store = RankStore(ckpt_dir=str(tmp_path), ckpt_every=2)
+    r0 = jnp.full((N,), 1.0 / N, jnp.float64)
+    store.publish(g, r0, last_seq=-1)             # gen 0: checkpointed
+    store.publish(g, r0 * 2, last_seq=5)          # gen 1: not (every=2)
+    store.publish(g, r0 * 3, last_seq=11)         # gen 2: checkpointed
+    restored = RankStore(ckpt_dir=str(tmp_path),
+                         ckpt_every=2).restore_latest(N)
+    assert restored is not None
+    ranks, gen, last_seq = restored
+    assert gen == 2 and last_seq == 11
+    np.testing.assert_allclose(np.asarray(ranks), np.asarray(r0) * 3)
+
+
+def test_seed_generation_continues_after_restart():
+    g, _ = _graph()
+    store = RankStore()
+    store.seed_generation(7)
+    r = jnp.full((N,), 1.0 / N, jnp.float64)
+    assert store.publish(g, r, last_seq=3) == 7
+    assert store.publish(g, r, last_seq=4) == 8
+
+
+# ---------------------------------------------------------------------------
+# engine: streaming equivalence, fallback, background thread
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["frontier", "frontier_prune"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_streaming_equivalence_property(method, seed):
+    """N micro-batched serve-loop steps over a random insert/delete event
+    stream reach the same fixed point as one-shot static PageRank on the
+    final graph (L1 <= 1e-6)."""
+    rng = np.random.default_rng(seed)
+    g, edges = _graph(seed=seed)
+    live = set(map(tuple, edges.tolist()))
+    ingest, store, engine, metrics = _service(
+        g, method=method, flush_size=16, flush_interval=1e9,
+        # never fall back to static here — the point is the DF/DF-P path
+        static_fallback_frac=2.0,
+        # tolerance-bounded drift accumulates per micro-batch; tighten the
+        # frontier thresholds so ~15 batches stay within the 1e-6 budget
+        frontier_tol=1e-9, prune_tol=1e-9)
+    engine.bootstrap()
+    submitted = 0
+    for i in range(200):
+        if live and rng.random() < 0.3:
+            u, v = sorted(live)[int(rng.integers(len(live)))]
+            if ingest.submit(DELETE, u, v) is not None:
+                live.discard((u, v))
+                submitted += 1
+        else:
+            u, v = int(rng.integers(N)), int(rng.integers(N))
+            if u != v and ingest.submit(INSERT, u, v) is not None:
+                live.add((u, v))
+                submitted += 1
+        engine.step()
+    engine.drain()
+    snap = store.snapshot()
+    # serve-loop graph realises exactly the event log's final edge set
+    s, d, va = (np.asarray(snap.graph.src), np.asarray(snap.graph.dst),
+                np.asarray(snap.graph.valid))
+    assert set(zip(s[va].tolist(), d[va].tolist())) == live
+    ref = static_pagerank(snap.graph)
+    assert l1_error(snap.ranks, ref.ranks) <= 1e-6
+    assert metrics.as_dict()["events_applied"] == submitted > 0
+
+
+def test_static_fallback_triggers_and_stays_correct():
+    g, _ = _graph()
+    ingest, store, engine, metrics = _service(
+        g, flush_size=32, static_fallback_frac=0.0)   # always falls back
+    engine.bootstrap()
+    rng = np.random.default_rng(3)
+    for _ in range(32):
+        u, v = rng.integers(0, N, 2)
+        if u != v:
+            ingest.submit(INSERT, int(u), int(v))
+    engine.drain()
+    m = metrics.as_dict()
+    assert m["static_fallbacks"] == m["batches"] > 0
+    snap = store.snapshot()
+    ref = static_pagerank(snap.graph)
+    assert l1_error(snap.ranks, ref.ranks) <= 1e-8
+
+
+def test_background_engine_thread_drains_queue():
+    g, _ = _graph()
+    ingest, store, engine, metrics = _service(g, flush_size=8,
+                                              flush_interval=0.005)
+    engine.bootstrap()
+    engine.start()
+    rng = np.random.default_rng(5)
+    try:
+        for _ in range(40):
+            u, v = rng.integers(0, N, 2)
+            if u != v:
+                ingest.submit(INSERT, int(u), int(v))
+    finally:
+        engine.stop(drain=True)
+    assert ingest.pending() == 0
+    assert store.snapshot().generation >= 1
+    assert metrics.as_dict()["events_applied"] > 0
+
+
+# ---------------------------------------------------------------------------
+# query: top-k, point ranks, personalized, staleness accounting
+# ---------------------------------------------------------------------------
+
+def test_queries_match_snapshot_ranks():
+    g, _ = _graph()
+    ingest, store, engine, metrics = _service(g)
+    engine.bootstrap()
+    client = QueryClient(store, ingest, metrics)
+    ranks = np.asarray(store.snapshot().ranks)
+
+    r = client.get_ranks([3, 1, 4])
+    np.testing.assert_allclose(r.ranks, ranks[[3, 1, 4]])
+    assert r.generation == 0 and r.staleness_events == 0
+
+    t = client.top_k(5)
+    np.testing.assert_allclose(np.asarray(t.ranks),
+                               np.sort(ranks)[::-1][:5])
+    np.testing.assert_allclose(ranks[t.vertices], t.ranks)
+
+    # unserved events show up as staleness
+    ingest.submit(INSERT, 0, 9)
+    ingest.submit(INSERT, 0, 10)
+    assert client.top_k(3).staleness_events == 2
+    assert metrics.as_dict()["queries_served"] == 3
+
+
+def test_personalized_top_k_biases_to_seeds():
+    g, _ = _graph()
+    _, store, engine, _ = _service(g)
+    engine.bootstrap()
+    client = QueryClient(store)
+    res = client.personalized_top_k(seeds=[7], k=8)
+    assert 7 in res.vertices.tolist()             # seed holds teleport mass
+    global_top = client.top_k(8)
+    assert res.vertices.tolist() != global_top.vertices.tolist()
+
+
+# ---------------------------------------------------------------------------
+# the shared affected-set builder (core.api) — serve engine's contract
+# ---------------------------------------------------------------------------
+
+def test_build_initial_state_per_method():
+    g, _ = _graph()
+    upd = make_batch_update(np.zeros((0, 2)), np.array([[1, 2]]), 8, 8)
+    g2 = apply_batch(g, upd)
+    prev = jnp.full((N,), 1.0 / N, jnp.float64)
+
+    r, a = build_initial_state(g, g2, upd, prev, "static")
+    assert float(jnp.max(jnp.abs(r - 1.0 / N))) == 0 and bool(jnp.all(a))
+    r, a = build_initial_state(g, g2, upd, prev, "naive")
+    assert r is prev and bool(jnp.all(a))
+    for m in ("traversal", "frontier", "frontier_prune"):
+        r, a = build_initial_state(g, g2, upd, prev, m)
+        assert r is prev
+        assert bool(a[1])                         # update endpoint marked
+        assert int(jnp.sum(a)) > 0
+    # frontier marking is local (seeds + 1 hop), unlike DT reachability
+    _, a = build_initial_state(g, g2, upd, prev, "frontier")
+    assert 0 < int(jnp.sum(a)) < N
+    with pytest.raises(ValueError):
+        build_initial_state(g, g2, upd, None, "frontier")
+    with pytest.raises(ValueError):
+        build_initial_state(g, g2, None, prev, "frontier")

@@ -1,0 +1,90 @@
+"""Regression: pin exactly which endpoints seed the DF/DF-P frontier.
+
+The paper (§3/§4.1, Alg.1 lines 4-6) seeds the initial marking from the
+**source endpoint u** of every edge (u, v) in Δ — for insertions AND
+deletions — because only u's out-degree changes, so only u's outgoing
+contributions R[u]/d_u are perturbed; v is then reached as a member of
+out(u).  ``touched_vertices_mask``'s docstring promises exactly that
+("u-endpoints of every edge in Δ"); this pins the behaviour to a
+hand-computed example so a refactor can't silently flip it to both
+endpoints (over-marking: correct but paper-unfaithful work inflation)
+or to destinations (under-marking: WRONG ranks).
+"""
+import numpy as np
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.core.pagerank import initial_affected
+from repro.graph.dynamic import apply_batch, make_batch_update, \
+    touched_vertices_mask
+from repro.graph.structure import from_coo
+
+# hand example: the chain 0→1→2→3→4 with an isolated vertex 5.
+#   Δ⁻ = {(1, 2)}   (deletion)      Δ⁺ = {(4, 5)}   (insertion)
+V = 6
+
+
+def _setup():
+    e = np.array([[0, 1], [1, 2], [2, 3], [3, 4]], np.int32)
+    g = from_coo(e[:, 0], e[:, 1], V, edge_capacity=16)
+    upd = make_batch_update(np.array([[1, 2]], np.int32),
+                            np.array([[4, 5]], np.int32), 8, 8)
+    return g, apply_batch(g, upd), upd
+
+
+def test_touched_mask_is_source_endpoints_only():
+    _, _, upd = _setup()
+    got = np.asarray(touched_vertices_mask(upd, V))
+    #                     0      1      2      3      4      5
+    want = np.array([False,  True, False, False,  True, False])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_touched_mask_deletion_seeds_deleted_source():
+    """A pure deletion batch seeds u (=1), not the lost target v (=2)."""
+    upd = make_batch_update(np.array([[1, 2]], np.int32),
+                            np.zeros((0, 2), np.int32), 8, 8)
+    got = np.asarray(touched_vertices_mask(upd, V))
+    want = np.array([False,  True, False, False, False, False])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_touched_mask_insertion_seeds_inserting_source():
+    """A pure insertion batch seeds u (=4), not the new target v (=5)."""
+    upd = make_batch_update(np.zeros((0, 2), np.int32),
+                            np.array([[4, 5]], np.int32), 8, 8)
+    got = np.asarray(touched_vertices_mask(upd, V))
+    want = np.array([False, False, False, False,  True, False])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_initial_affected_hand_computed():
+    """Alg.1 lines 4-6 on the chain example:
+
+    seeds {1, 4} expand to their out-neighbours in Gᵗ⁻¹ ∪ Gᵗ:
+    out(1) = {2} (Gᵗ⁻¹; gone in Gᵗ), out(4) = {5} (Gᵗ only), plus the
+    seeds themselves (every vertex's implicit self-loop puts u ∈ out(u),
+    and u's own rank depends on its changed out-degree).
+    """
+    g_prev, g_new, upd = _setup()
+    touched = touched_vertices_mask(upd, V)
+    got = np.asarray(initial_affected(g_prev, g_new, touched))
+    #                     0      1      2      3      4      5
+    want = np.array([False,  True,  True, False,  True,  True])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ranks_converge_from_pinned_seeds():
+    """End check: DF-P from exactly these seeds reproduces the static
+    fixed point of Gᵗ — i.e. the pinned seed set is *sufficient*."""
+    from repro.core.api import update_pagerank
+    from repro.core.reference import l1_error
+
+    g_prev, g_new, upd = _setup()
+    prev = update_pagerank(g_prev, g_prev, None, None, "static").ranks
+    res = update_pagerank(g_prev, g_new, upd, prev, "frontier_prune")
+    ref = update_pagerank(g_new, g_new, None, None, "static")
+    assert l1_error(res.ranks, ref.ranks) <= 1e-8
+    affected = np.asarray(res.affected_ever)
+    assert affected[1] and affected[4]            # seeds were processed
+    assert not affected[0]                        # upstream never marked
