@@ -1,0 +1,114 @@
+"""PPR walk-index benchmark: query latency vs the exact DF-P solve, and
+per-micro-batch walk repair vs a full index rebuild.
+
+Default shape is the acceptance scenario: a ~100k-vertex (2^17) RMAT
+graph at paper-scale R.  Query seeds are drawn from the population the
+index actually serves — seeds whose effective sample deg·R clears the
+``mode="auto"`` routing floor (thin/cold seeds route to the exact
+solver in production, so they are not part of the index-latency claim).
+
+Emitted rows (µs per call + derived):
+
+    ppr/build_index    one-off full build; derived = R/L/MB
+    ppr/query_index    index-backed personalized top-10, median seed
+    ppr/query_exact    the same queries via the exact DF-P solve;
+                       derived = speedup and tie-tolerant precision@10
+                       of the index answers against this oracle
+    ppr/repair         walk repair for one coalesced micro-batch;
+                       derived = walks resampled (== stale count —
+                       the resample-count invariant is asserted),
+                       full-rebuild µs and the repair speedup
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.extensions import personalized_pagerank
+from repro.graph.dynamic import apply_batch, make_batch_update, \
+    touched_vertices_mask
+from repro.graph.generators import random_batch_update, rmat_edges
+from repro.graph.structure import from_coo
+from repro.ppr import (DEFAULT_MIN_EFFECTIVE_WALKS, IndexConfig,
+                       build_walk_index, ppr_top_k, precision_at_k,
+                       repair_walk_index, stale_walks)
+
+
+def _timed(fn, repeats=3):
+    out = fn()
+    jax.block_until_ready(out)
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(scale=17, edge_factor=8, num_walks=64, max_len=16, num_queries=4,
+        batch_size=256, topk=10, seed=0):
+    edges, n = rmat_edges(scale, edge_factor, seed=1)
+    graph = from_coo(edges[:, 0], edges[:, 1], n,
+                     edge_capacity=int(len(edges) * 1.2))
+    cfg = IndexConfig(num_walks=num_walks, max_len=max_len, seed=seed)
+
+    t0 = time.perf_counter()
+    index = build_walk_index(graph, cfg)
+    jax.block_until_ready(index.steps)
+    t_build = time.perf_counter() - t0
+    emit("ppr/build_index", t_build,
+         f"R={num_walks};L={max_len};MB={index.nbytes()/1e6:.0f}")
+
+    # ---- query latency + accuracy vs the exact oracle --------------------
+    deg = np.asarray(index.csr.deg)
+    min_deg = -(-DEFAULT_MIN_EFFECTIVE_WALKS // num_walks)  # ceil division
+    rng = np.random.default_rng(seed)
+    seeds = rng.choice(np.flatnonzero(deg >= min_deg), num_queries,
+                       replace=False)
+    t_idx, t_exact, precisions = [], [], []
+    for s in seeds:
+        t, (ap_idx, _) = _timed(lambda s=s: ppr_top_k(index, [int(s)], topk))
+        t_idx.append(t)
+        mask = jnp.zeros((n,), bool).at[int(s)].set(True)
+        t, res = _timed(
+            lambda m=mask: personalized_pagerank(graph, m), repeats=1)
+        t_exact.append(t)
+        precisions.append(precision_at_k(np.asarray(ap_idx),
+                                         np.asarray(res.ranks), topk))
+    q_idx, q_exact = float(np.median(t_idx)), float(np.median(t_exact))
+    emit("ppr/query_index", q_idx,
+         f"p_at_{topk}={float(np.mean(precisions)):.2f}")
+    emit("ppr/query_exact", q_exact,
+         f"speedup={q_exact / q_idx:.0f}x;"
+         f"p_at_{topk}={float(np.mean(precisions)):.2f}")
+
+    # ---- incremental repair vs full rebuild ------------------------------
+    dele, ins = random_batch_update(edges, n, batch_size, seed=seed + 1)
+    upd = make_batch_update(dele, ins, max(8, len(dele)), max(8, len(ins)))
+    graph2 = apply_batch(graph, upd)
+    touched = touched_vertices_mask(upd, n)
+    num_stale = int(jnp.sum(stale_walks(index.steps, touched)[0]))
+
+    def do_repair():
+        out, resampled = repair_walk_index(index, graph2, touched)
+        # the resample-count invariant: ONLY walks intersecting touched
+        # vertices are resampled, every one of them exactly once
+        assert resampled == num_stale, (resampled, num_stale)
+        return out.steps
+
+    t_repair, _ = _timed(do_repair)
+    t_rebuild, _ = _timed(lambda: build_walk_index(graph2, cfg).steps,
+                          repeats=1)
+    emit("ppr/repair", t_repair,
+         f"resampled={num_stale}/{n * num_walks};"
+         f"rebuild_us={t_rebuild*1e6:.0f};"
+         f"speedup={t_rebuild / t_repair:.0f}x")
+
+
+if __name__ == "__main__":
+    run()

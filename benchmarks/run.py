@@ -24,8 +24,9 @@ def main(argv=None) -> None:
     t0 = time.time()
     from benchmarks import (bench_affected, bench_dynamic_stream,
                             bench_frontier_tolerance, bench_kernel,
-                            bench_prune_tolerance, bench_random_updates,
-                            bench_scaling, bench_serving, common)
+                            bench_ppr, bench_prune_tolerance,
+                            bench_random_updates, bench_scaling,
+                            bench_serving, common)
     print("name,us_per_call,derived")
     mods = [
         ("fig2_frontier_tolerance", bench_frontier_tolerance),
@@ -36,6 +37,7 @@ def main(argv=None) -> None:
         ("fig12_random_updates", bench_random_updates),
         ("kernel_gated_spmv", bench_kernel),
         ("bench_serving", bench_serving),
+        ("bench_ppr", bench_ppr),
     ]
     for name, mod in mods:
         if args.only and args.only not in name:

@@ -20,11 +20,24 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CSRView(NamedTuple):
+    """Compressed out-adjacency over the *valid* edges of an EdgeListGraph.
+
+    A plain pytree of device arrays, built by ``EdgeListGraph.to_device_csr``.
+    ``deg`` excludes the implicit self-loop; samplers treat slot ``deg[u]``
+    as the self-loop.
+    """
+
+    indptr: jax.Array    # int32[V + 1]
+    indices: jax.Array   # int32[E_cap]  (valid prefix per segment only)
+    deg: jax.Array       # int32[V]
 
 
 @jax.tree_util.register_dataclass
@@ -72,6 +85,27 @@ class EdgeListGraph:
         f = jnp.where(self.valid, flags[self.src].astype(jnp.int32), 0)
         out = jax.ops.segment_max(f, self.dst, num_segments=self.num_vertices)
         return out > 0
+
+    def to_device_csr(self) -> "CSRView":
+        """Device CSR view over valid edges (jit-able) — for the random-walk
+        sampler (repro.ppr).
+
+        ``indices[indptr[u] : indptr[u] + deg[u]]`` are u's out-neighbours.
+        Entries past ``indptr[V]`` are garbage (dst of invalid slots) and
+        must never be read.  Stability contract: a vertex whose incident
+        edge slots did not change keeps its neighbour list *in the same
+        order* across ``apply_batch`` calls (stable argsort over equal keys
+        preserves slot order), which is what lets walk repair keep
+        untouched walk prefixes bitwise intact.
+        """
+        V = self.num_vertices
+        key = jnp.where(self.valid, self.src, V)
+        order = jnp.argsort(key, stable=True)
+        deg = jax.ops.segment_sum(self.valid.astype(jnp.int32), self.src,
+                                  num_segments=V)
+        indptr = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(deg, dtype=jnp.int32)])
+        return CSRView(indptr=indptr, indices=self.dst[order], deg=deg)
 
     def to_host_csr(self):
         """NumPy CSR (indptr, indices) over valid edges — for samplers/oracles."""

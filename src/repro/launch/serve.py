@@ -30,6 +30,7 @@ from repro.core.api import METHODS
 from repro.data.snap import PAPER_TABLE1, load_temporal
 from repro.graph.dynamic import apply_batch, make_batch_update
 from repro.launch.pagerank import _resolve_mesh
+from repro.ppr import IndexConfig
 from repro.serve import IngestQueue, QueryClient, RankStore, ServeEngine, \
     ServeMetrics, preload_graph_and_feed
 
@@ -49,6 +50,12 @@ def main(argv=None):
                     help="issue a query burst every K submitted events")
     ap.add_argument("--topk", type=int, default=10)
     ap.add_argument("--static-fallback-frac", type=float, default=0.25)
+    ap.add_argument("--ppr-walks", type=int, default=0,
+                    help="maintain a PPR walk index with R walks/vertex "
+                         "(0 = off); query bursts then include an "
+                         "index-backed personalized top-k")
+    ap.add_argument("--ppr-len", type=int, default=16,
+                    help="walk-index max length L (with --ppr-walks)")
     ap.add_argument("--mesh", choices=["none", "test", "production"],
                     default="none")
     ap.add_argument("--ckpt-dir", default="")
@@ -93,9 +100,13 @@ def main(argv=None):
     ingest = IngestQueue(flush_size=args.flush_size,
                          flush_interval=args.flush_interval_ms * 1e-3,
                          start_seq=start_event)
+    ppr_cfg = (IndexConfig(num_walks=args.ppr_walks, max_len=args.ppr_len,
+                           seed=args.seed)
+               if args.ppr_walks > 0 else None)
     engine = ServeEngine(graph, ingest, store, metrics=metrics,
                          method=args.method, mesh=mesh,
-                         static_fallback_frac=args.static_fallback_frac)
+                         static_fallback_frac=args.static_fallback_frac,
+                         ppr_index=ppr_cfg)
     if restored is not None:
         engine.bootstrap(ranks=restored[0], last_seq=start_event - 1)
     else:
@@ -118,9 +129,15 @@ def main(argv=None):
             verts = rng.integers(0, ds.num_vertices, size=4)
             client.get_ranks(verts)
             r = client.top_k(args.topk)
+            ppr_note = ""
+            if args.ppr_walks > 0:
+                p = client.personalized_top_k(
+                    [int(verts[0])], args.topk, mode="auto")
+                ppr_note = f" ppr_top1={p.vertices[0]}"
             print(f"event {i + 1:6d}: gen={r.generation:5d} "
                   f"stale={r.staleness_events:4d}ev "
-                  f"top1={r.vertices[0]} ({r.ranks[0]:.3e})", flush=True)
+                  f"top1={r.vertices[0]} ({r.ranks[0]:.3e})"
+                  f"{ppr_note}", flush=True)
     engine.drain()
     wall = time.perf_counter() - t0
 

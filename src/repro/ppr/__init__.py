@@ -1,0 +1,28 @@
+"""repro.ppr — incrementally-maintained random-walk index for low-latency
+personalized PageRank.
+
+The exact solvers (core/extensions) answer a PPR query with a full
+power iteration; this package answers it from R pre-stored
+decay-terminated walks per vertex in a few device ops, and repairs the
+stored walks per edge batch from the same ``touched_vertices_mask``
+signal the DF/DF-P engines use — the Monte-Carlo analogue of the DF
+frontier.  See DESIGN.md §6.
+
+    index = build_walk_index(graph, IndexConfig(num_walks=32))
+    verts, est = ppr_top_k(index, seeds=[7], k=10)        # fast path
+    index, resampled = repair_walk_index(index, graph_new, touched)
+"""
+from repro.ppr.estimator import (DEFAULT_MIN_EFFECTIVE_WALKS, diagnostics,
+                                 effective_walks, error_bound,
+                                 precision_at_k, truncation_bias,
+                                 walks_for_error)
+from repro.ppr.query import ppr_estimate, ppr_top_k
+from repro.ppr.repair import repair_walk_index, stale_walks
+from repro.ppr.walks import IndexConfig, WalkIndex, build_walk_index
+
+__all__ = [
+    "DEFAULT_MIN_EFFECTIVE_WALKS", "IndexConfig", "WalkIndex",
+    "build_walk_index", "diagnostics", "effective_walks", "error_bound",
+    "ppr_estimate", "ppr_top_k", "precision_at_k", "repair_walk_index",
+    "stale_walks", "truncation_bias", "walks_for_error",
+]

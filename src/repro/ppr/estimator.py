@@ -1,0 +1,122 @@
+"""Error accounting for the walk index: trade R (memory/build time) for ε.
+
+Two regimes, both per-vertex pointwise bounds for a single-seed query:
+
+* **Sampling error** — each walk's contribution to est(v) lies in
+  [0, (1-α)·L] (a walk can visit v at most L times), so Hoeffding gives
+
+      P(|est(v) − E est(v)| ≥ ε) ≤ 2·exp(−2 R ε² / ((1−α)L)²)
+
+  This is deliberately conservative (revisits are rare on non-trivial
+  graphs); treat it as a worst-case sizing rule, and the endpoint-bound
+  variant (c = 1−α) as the optimistic floor.
+
+* **Truncation bias** — walks are capped at L slots (L-1 transitions);
+  the lost tail mass is α^(L-1) of the PPR distribution (geometric
+  continue-probability α), i.e. ~4.6e-2 at the α=0.85, L=20 defaults
+  and ~8.7e-2 at the serving default L=16.  ``normalize=True`` in the
+  query path redistributes it proportionally.
+
+``diagnostics`` reports the realised index shape (mean walk length,
+truncated fraction, bytes) so serving can monitor whether the sampled
+walks match the geometric model the bounds assume.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ppr.walks import WalkIndex
+
+
+def truncation_bias(alpha: float, max_len: int) -> float:
+    """PPR mass beyond the L-hop cap: α^L (slot 0 is the source, so the
+    cap allows L-1 transitions ⇒ bias α^(L-1) visits-wise; report the
+    conservative exponent)."""
+    return float(alpha) ** int(max_len - 1)
+
+
+def walks_for_error(eps: float, delta: float, alpha: float,
+                    max_len: int, per_visit_cap: bool = True) -> int:
+    """Smallest R with P(|est − E| ≥ eps) ≤ delta per vertex (Hoeffding).
+
+    ``per_visit_cap=True`` uses the conservative c = (1−α)L walk
+    contribution; False uses the endpoint-estimator bound c = 1−α.
+    """
+    if not (0 < eps and 0 < delta < 1):
+        raise ValueError("need eps > 0 and 0 < delta < 1")
+    c = (1.0 - alpha) * (max_len if per_visit_cap else 1.0)
+    return max(1, math.ceil(c * c * math.log(2.0 / delta) / (2.0 * eps * eps)))
+
+
+def error_bound(num_walks: int, delta: float, alpha: float,
+                max_len: int, per_visit_cap: bool = True) -> float:
+    """The ε guaranteed at confidence 1−δ by R walks (inverse of
+    ``walks_for_error``)."""
+    if not (num_walks >= 1 and 0 < delta < 1):
+        raise ValueError("need num_walks >= 1 and 0 < delta < 1")
+    c = (1.0 - alpha) * (max_len if per_visit_cap else 1.0)
+    return c * math.sqrt(math.log(2.0 / delta) / (2.0 * num_walks))
+
+
+# Effective sample floor for serving top-k from the index (mode="auto"):
+# one query over seed set S aggregates Σ_s d_s·R walks (query.py unrolls
+# each seed through its out-neighbours' walk sets).  Below ~512 effective
+# walks the top-10 tail of a 100k-vertex power-law graph is noise-ranked
+# (measured: p@10 ≈ 0.85 at 256–512, ≥ 0.98 at 512+ with paper-scale
+# R=64); at or above it the index answer is serving-grade.  Thin (cold)
+# seeds route to the exact solver instead — the Hoeffding machinery above
+# gives the scaling, this constant pins the empirical operating point.
+DEFAULT_MIN_EFFECTIVE_WALKS = 512
+
+
+def effective_walks(index: WalkIndex, seeds: Sequence[int]) -> int:
+    """Σ_s out_degree(s) · R — walks the unrolled estimator aggregates for
+    this seed set; the routing signal for QueryClient mode=\"auto\"."""
+    s = np.unique(np.asarray(seeds, np.int64).reshape(-1))
+    # gather + reduce on device: this runs per auto-routed query, and
+    # pulling the whole [V] degree vector to the host would cost more
+    # than the fast path it is routing to
+    deg_sum = int(jnp.sum(index.csr.deg[jnp.asarray(s, jnp.int32)]))
+    return deg_sum * index.num_walks
+
+
+def diagnostics(index: WalkIndex) -> Dict[str, float]:
+    """Realised-sample health: walk lengths vs the geometric model."""
+    mask = index.mask()
+    lengths = jnp.sum(mask, axis=-1)                     # [V, R] incl. source
+    mean_len = float(jnp.mean(lengths))
+    # a walk still alive in the last slot was truncated by the L cap
+    truncated = float(jnp.mean(mask[:, :, -1]))
+    return dict(
+        num_walks=float(index.num_walks),
+        max_len=float(index.max_len),
+        mean_length=mean_len,
+        # geometric model: E[len] = 1/(1-α), capped at L
+        expected_length=min(1.0 / (1.0 - index.alpha), float(index.max_len)),
+        truncated_frac=truncated,
+        truncation_bias=truncation_bias(index.alpha, index.max_len),
+        nbytes=float(index.nbytes()),
+    )
+
+
+def precision_at_k(approx_top: Sequence[int], exact_ranks: np.ndarray,
+                   k: int, rel_tol: float = 0.05) -> float:
+    """Tie-tolerant precision@k — the accuracy metric bench_ppr and the
+    oracle tests report.
+
+    Exact PPR vectors on real graphs have *tie classes* (e.g. a seed's
+    thirty ~equal-weight neighbours): any ordering inside a class is
+    equally correct, and the exact solver's own top-k is one arbitrary
+    pick.  So the eligible set is every vertex whose exact value is
+    within ``rel_tol`` of the k-th largest, and precision is the
+    fraction of the approximate top-k drawn from it.
+    """
+    exact_ranks = np.asarray(exact_ranks, np.float64).reshape(-1)
+    approx = np.asarray(approx_top).reshape(-1)[:k]
+    kth = np.partition(exact_ranks, -k)[-k]
+    eligible = exact_ranks >= kth * (1.0 - rel_tol)
+    return float(np.sum(eligible[approx])) / max(1, len(approx))

@@ -1,0 +1,178 @@
+"""PPR queries over a WalkIndex: visit-count aggregation + top-k.
+
+The base Monte-Carlo identity: the expected number of visits to v by one
+decay-terminated walk from s is PPR(s, v)/(1-α), so scaled visit counts
+over R stored walks estimate the PPR vector.  Used directly, the sample
+size per query is R — too small to resolve the top-k tail at serving
+R.  The query path therefore applies **one-step unrolling** through the
+implicit-self-loop closed form (the same Eq.-2 manipulation DF-P uses
+for its rank update):
+
+    π_s = [ (1-α)·e_s + α/(d_s+1) · Σ_{u ∈ N⁺(s)} π_u ] / (1 − α/(d_s+1))
+
+i.e. a seed's PPR is an exactly-weighted mixture of its out-neighbours'
+PPR vectors plus a point mass at the seed — and each neighbour's π_u is
+estimated from *that vertex's own* stored walks.  One query over a
+degree-d seed thus aggregates (d)·R walks instead of R, multiplying the
+effective sample size by the out-degree with zero extra storage (the
+composition trick of Bahmani et al.).  Seed sets average the per-seed
+estimates (uniform teleport over seeds — the contract of
+core.extensions.personalized_pagerank).  Degree-0 seeds are exact:
+π_s = e_s.
+
+Mechanics: gather the [seeds ∪ their neighbours, R, L] walk positions
+from the index, one ``jax.ops.segment_sum`` of per-source weights (the
+kernels/segment_ops gated SpMM targets feature *matrices* per window,
+so this flat count vector stays on the jnp path), add the closed-form
+point masses, ``lax.top_k``.  Everything is jit-compiled; seed and
+neighbour blocks are padded to power-of-two buckets so an online query
+mix reuses a handful of executables — a few device ops per query, the
+sub-millisecond path a full DF-P solve cannot offer.
+
+``unroll=False`` exposes the raw R-walk estimator (used by the
+estimator-convergence tests; its ε is what estimator.py bounds).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ppr.walks import WalkIndex
+
+_MIN_SEED_CAP = 1       # pow2 seed buckets: 1, 2, 4, ... bound compiles
+_MIN_NBR_CAP = 8
+_MAX_NBR_WIDTH = 1024   # neighbour-slab width cap (memory + compile bound)
+
+
+def _counts(steps: jax.Array, sources: jax.Array, weights: jax.Array
+            ) -> jax.Array:
+    """f64[V] Σ over walk positions of the gathered ``sources`` rows,
+    each position weighted by its source's scalar weight."""
+    V = steps.shape[0]
+    sel = steps[jnp.clip(sources, 0, V - 1)]              # [B, R, L]
+    w = jnp.where(sel >= 0, weights[:, None, None], 0.0)
+    return jax.ops.segment_sum(
+        w.ravel(), jnp.clip(sel, 0, V - 1).ravel(), num_segments=V)
+
+
+@partial(jax.jit, static_argnames=("normalize",))
+def _direct_estimate(steps: jax.Array, alpha: float, seeds_idx: jax.Array,
+                     seeds_mask: jax.Array, normalize: bool) -> jax.Array:
+    """Raw estimator: (1-α)/R · visit counts of the seeds' own walks."""
+    R = steps.shape[1]
+    n_seeds = jnp.maximum(jnp.sum(seeds_mask.astype(jnp.float64)), 1.0)
+    w = jnp.where(seeds_mask, (1.0 - alpha) / (R * n_seeds), 0.0)
+    est = _counts(steps, seeds_idx, w)
+    if normalize:
+        est = est / jnp.maximum(jnp.sum(est), 1e-300)
+    return est
+
+
+@partial(jax.jit, static_argnames=("width",))
+def _unrolled_chunk(steps: jax.Array, indptr: jax.Array,
+                    indices: jax.Array, deg: jax.Array, alpha: float,
+                    seeds_idx: jax.Array, seeds_mask: jax.Array,
+                    offset: jax.Array, width: int) -> jax.Array:
+    """Visit counts of neighbour columns [offset, offset+width) of each
+    seed's CSR row — one bounded-size slab of the unrolled estimator."""
+    V, R, _ = steps.shape
+    E = indices.shape[0]
+    n_seeds = jnp.maximum(jnp.sum(seeds_mask.astype(jnp.float64)), 1.0)
+    d = deg[jnp.clip(seeds_idx, 0, V - 1)]                # [S]
+    z = 1.0 - alpha / (d + 1.0)                           # closed-form denom
+    col = offset + jnp.arange(width, dtype=jnp.int32)[None, :]
+    nbr_ok = seeds_mask[:, None] & (col < d[:, None])
+    nbr = indices[jnp.clip(indptr[jnp.clip(seeds_idx, 0, V - 1)][:, None]
+                           + col, 0, E - 1)]
+    nbr = jnp.where(nbr_ok, nbr, 0)
+    # per-source weight of one walk position:  α(1-α) / ((d+1)·z·R·|S|)
+    w_nbr = jnp.where(nbr_ok,
+                      alpha * (1.0 - alpha)
+                      / ((d[:, None] + 1.0) * z[:, None] * R * n_seeds),
+                      0.0)
+    return _counts(steps, nbr.ravel(), w_nbr.ravel().astype(jnp.float64))
+
+
+@jax.jit
+def _seed_point_mass(est: jax.Array, deg: jax.Array, alpha: float,
+                     seeds_idx: jax.Array, seeds_mask: jax.Array
+                     ) -> jax.Array:
+    """Add each seed's closed-form point mass (1-α)/(z·|S|)."""
+    V = est.shape[0]
+    n_seeds = jnp.maximum(jnp.sum(seeds_mask.astype(jnp.float64)), 1.0)
+    d = deg[jnp.clip(seeds_idx, 0, V - 1)]
+    z = 1.0 - alpha / (d + 1.0)
+    return est.at[jnp.clip(seeds_idx, 0, V - 1)].add(
+        jnp.where(seeds_mask, (1.0 - alpha) / (z * n_seeds), 0.0))
+
+
+def _unrolled_estimate(index: WalkIndex, seeds_idx: jax.Array,
+                       seeds_mask: jax.Array, nbr_cap: int,
+                       normalize: bool) -> jax.Array:
+    """One-step-unrolled estimate; the neighbour axis is processed in
+    slabs of at most ``_MAX_NBR_WIDTH`` columns so a hub seed costs a
+    bounded gather per slab instead of one pow2(max-degree)-wide buffer
+    (which at degree ~4k would be hundreds of MB of transients), and jit
+    shape buckets stay capped at the slab width."""
+    deg = index.csr.deg.astype(jnp.float64)
+    width = min(nbr_cap, _MAX_NBR_WIDTH)
+    est = None
+    for offset in range(0, nbr_cap, width):
+        c = _unrolled_chunk(index.steps, index.csr.indptr,
+                            index.csr.indices, deg, index.alpha,
+                            seeds_idx, seeds_mask,
+                            jnp.asarray(offset, jnp.int32), width)
+        est = c if est is None else est + c
+    est = _seed_point_mass(est, deg, index.alpha, seeds_idx, seeds_mask)
+    if normalize:
+        est = est / jnp.maximum(jnp.sum(est), 1e-300)
+    return est
+
+
+def _pad_seeds(seeds: Sequence[int], V: int) -> Tuple[jax.Array, jax.Array]:
+    s = np.unique(np.asarray(seeds, np.int64).reshape(-1))
+    if len(s) == 0:
+        raise ValueError("PPR query needs at least one seed")
+    if s.min() < 0 or s.max() >= V:
+        raise ValueError(f"seed out of range [0, {V})")
+    cap = max(_MIN_SEED_CAP, 1 << (len(s) - 1).bit_length())
+    idx = np.zeros((cap,), np.int32)
+    idx[: len(s)] = s
+    mask = np.arange(cap) < len(s)
+    return jnp.asarray(idx), jnp.asarray(mask)
+
+
+def _nbr_cap(index: WalkIndex, seeds_idx: jax.Array,
+             seeds_mask: jax.Array) -> int:
+    """pow2 neighbour-block width covering the query's largest seed."""
+    d_max = int(jnp.max(jnp.where(seeds_mask, index.csr.deg[seeds_idx], 0)))
+    return max(_MIN_NBR_CAP, 1 << max(0, d_max - 1).bit_length())
+
+
+def ppr_estimate(index: WalkIndex, seeds: Sequence[int],
+                 normalize: bool = True, unroll: bool = True) -> jax.Array:
+    """f64[V] estimated PPR vector for a seed set (uniform teleport over
+    the seeds).  ``normalize=True`` rescales to a distribution (absorbs
+    the α^L truncation tail); top-k is unaffected either way."""
+    idx, mask = _pad_seeds(seeds, index.num_vertices)
+    if not unroll:
+        return _direct_estimate(index.steps, index.alpha, idx, mask,
+                                normalize)
+    return _unrolled_estimate(index, idx, mask,
+                              _nbr_cap(index, idx, mask), normalize)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _topk(est: jax.Array, k: int):
+    vals, idx = jax.lax.top_k(est, k)
+    return idx, vals
+
+
+def ppr_top_k(index: WalkIndex, seeds: Sequence[int], k: int,
+              unroll: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """(vertices int[k], estimates f64[k]) — the serving fast path."""
+    return _topk(ppr_estimate(index, seeds, unroll=unroll), k)

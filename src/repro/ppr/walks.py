@@ -1,0 +1,150 @@
+"""Decay-terminated random-walk index for Monte-Carlo personalized PageRank.
+
+The serving layer answers ``personalized_top_k`` with a full DF-P power
+iteration per query — exact, but orders of magnitude too slow for query
+traffic.  Bahmani et al. (*Fast Incremental and Personalized PageRank*)
+store R short random walks per vertex instead: visit counts over the
+walks from a seed estimate its PPR vector in sub-millisecond time, and
+the stored walks can be *repaired* per edge batch (repro.ppr.repair)
+instead of rebuilt.
+
+Layout — fixed device shapes so one compiled builder/repairer serves the
+whole stream:
+
+  ``steps: int32[V, R, L]``   vertex occupied at hop t; slot 0 is the
+                              source itself; ``-1`` once the walk has
+                              decay-terminated (no validity array —
+                              the sentinel IS the mask).
+
+Transition kernel matches the exact solvers (core/pagerank.py): from u,
+pick uniformly among u's ``deg`` valid out-edges *plus the implicit
+self-loop* (slot ``deg``), i.e. P(stay) = 1/(deg+1); continue with
+probability ``alpha`` per hop.  The endpoint of such a walk is
+PPR-distributed, and the expected visit count of v is PPR(s, v)/(1-α)
+(repro.ppr.query aggregates visits — lower variance than endpoints).
+
+PRNG discipline — the load-bearing design decision: the randomness of
+walk i at hop t is ``fold_in(fold_in(base_key, i), t)``, a pure function
+of (base_key, walk id, hop).  No draw depends on any other walk, on the
+graph, or on process state.  Consequences:
+
+  * rebuild with the same key is bitwise deterministic (checkpointed
+    restarts reproduce the index exactly — no hash()/process state);
+  * a walk's trajectory is a pure function of (graph, base_key), so
+    repairing stale suffixes on Gᵗ reproduces *exactly* the walk a
+    fresh build on Gᵗ would draw — repair is bitwise equivalent to
+    rebuild while resampling only walks that intersect the update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pagerank import ALPHA
+from repro.graph.structure import CSRView, EdgeListGraph
+
+DEFAULT_NUM_WALKS = 32
+DEFAULT_MAX_LEN = 20
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    """Build-time knobs; hold one of these to (re)build identical indexes."""
+
+    num_walks: int = DEFAULT_NUM_WALKS    # R walks per vertex
+    max_len: int = DEFAULT_MAX_LEN        # L slots incl. the source slot
+    alpha: float = ALPHA                  # continue probability (= damping)
+    seed: int = 0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WalkIndex:
+    """R decay-terminated walks per vertex; a pytree, safe under jit.
+
+    Carries the CSR view of the graph it was sampled on (query.py's
+    one-step-unrolled estimator reads seed neighbour lists from it);
+    repair keeps walks and CSR consistent as a unit.
+    """
+
+    steps: jax.Array     # int32[V, R, L]; -1 = terminated
+    csr: CSRView         # adjacency the walks are valid for
+    key: jax.Array       # uint32[2] base PRNG key (classic threefry key)
+    num_walks: int = dataclasses.field(metadata=dict(static=True))
+    max_len: int = dataclasses.field(metadata=dict(static=True))
+    alpha: float = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_vertices(self) -> int:
+        return self.steps.shape[0]
+
+    def mask(self) -> jax.Array:
+        """bool[V, R, L]: positions actually occupied."""
+        return self.steps >= 0
+
+    def nbytes(self) -> int:
+        return self.steps.size * 4
+
+
+def _walk_keys(base_key: jax.Array, walk_ids: jax.Array) -> jax.Array:
+    """Per-walk keys, fold_in(base_key, walk id) — hop-independent, so
+    callers hoist this out of their scan over hops."""
+    return jax.vmap(jax.random.fold_in, (None, 0))(base_key, walk_ids)
+
+
+def _walk_draws(walk_keys: jax.Array, t: jax.Array) -> jax.Array:
+    """f[N, 2] uniforms for (walk, hop): [:, 0] continue, [:, 1] choice.
+
+    With ``walk_keys`` from ``_walk_keys``, the draw is a pure function
+    of (base_key, walk id, hop) — see module docstring.
+    """
+    keys = jax.vmap(jax.random.fold_in, (0, None))(walk_keys, t)
+    return jax.vmap(lambda k: jax.random.uniform(k, (2,), jnp.float32))(keys)
+
+
+def _transition(csr: CSRView, cur: jax.Array, choice: jax.Array) -> jax.Array:
+    """One hop from ``cur``: slot j ~ U{0..deg}, slot deg = self-loop."""
+    deg = csr.deg[cur]
+    j = jnp.minimum((choice * (deg + 1).astype(jnp.float32))
+                    .astype(jnp.int32), deg)
+    idx = jnp.clip(csr.indptr[cur] + j, 0, csr.indices.shape[0] - 1)
+    return jnp.where(j >= deg, cur, csr.indices[idx])
+
+
+@partial(jax.jit,
+         static_argnames=("num_vertices", "num_walks", "max_len", "alpha"))
+def _build_steps(csr: CSRView, key: jax.Array, num_vertices: int,
+                 num_walks: int, max_len: int, alpha: float) -> jax.Array:
+    V, R, L = num_vertices, num_walks, max_len
+    N = V * R
+    walk_keys = _walk_keys(key, jnp.arange(N, dtype=jnp.uint32))
+    cur0 = jnp.repeat(jnp.arange(V, dtype=jnp.int32), R)
+
+    def hop(carry, t):
+        cur, alive = carry
+        u = _walk_draws(walk_keys, t)
+        alive = alive & (u[:, 0] < alpha)
+        nxt = _transition(csr, cur, u[:, 1])
+        cur = jnp.where(alive, nxt, cur)
+        return (cur, alive), jnp.where(alive, cur, -1)
+
+    _, tail = jax.lax.scan(hop, (cur0, jnp.ones((N,), bool)),
+                           jnp.arange(1, L, dtype=jnp.int32))
+    steps = jnp.concatenate([cur0[None, :], tail], axis=0)   # [L, N]
+    return steps.T.reshape(V, R, L)
+
+
+def build_walk_index(graph: EdgeListGraph,
+                     config: IndexConfig = IndexConfig()) -> WalkIndex:
+    """Sample the full index on ``graph`` — fully vectorized over V·R walks
+    (one ``lax.scan`` over hops, all walks advance in lockstep)."""
+    key = jax.random.PRNGKey(config.seed)
+    csr = graph.to_device_csr()
+    steps = _build_steps(csr, key, graph.num_vertices,
+                         config.num_walks, config.max_len, config.alpha)
+    return WalkIndex(steps=steps, csr=csr, key=key,
+                     num_walks=config.num_walks, max_len=config.max_len,
+                     alpha=config.alpha)

@@ -5,10 +5,12 @@ edges arrive; this package supplies the missing front end: an event
 queue that coalesces edge events into capacity-padded micro-batches
 (``ingest``), a double-buffered snapshot store so queries never block on
 an in-flight update (``state``), the update loop driving the DF/DF-P
-engines with an automatic static fallback at large batch fractions
-(``engine``), the query surface — point ranks, jit top-k, personalized
-top-k (``query``) — and per-batch latency/freshness/work counters
-(``metrics``).  See DESIGN.md §5 for the architecture.
+engines with an automatic static fallback at large batch fractions and
+an opt-in incrementally-repaired PPR walk index (``engine``,
+``ppr_index=``), the query surface — point ranks, jit top-k,
+personalized top-k with index/exact routing (``query``) — and per-batch
+latency/freshness/work counters (``metrics``).  See DESIGN.md §5 for
+the architecture and §6 for the walk index.
 """
 from repro.serve.engine import ServeEngine
 from repro.serve.ingest import CoalescedBatch, EdgeEvent, IngestQueue, \

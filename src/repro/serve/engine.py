@@ -18,6 +18,13 @@ anyway, so the decision adds no extra passes for frontier methods.
 
 ``mesh=`` routes the rank update through the distributed shard_map
 engine (repro.dist) — ingest/snapshot/query stay host-side either way.
+
+``ppr_index=`` (an ``repro.ppr.IndexConfig`` or prebuilt ``WalkIndex``)
+opts the engine into maintaining a random-walk PPR index alongside the
+ranks: built at bootstrap, repaired inside every micro-batch step from
+the batch's ``touched_vertices_mask`` (only walks intersecting touched
+vertices resample), and published with each snapshot so index-backed
+``personalized_top_k`` answers stay consistent with the served ranks.
 """
 from __future__ import annotations
 
@@ -31,8 +38,10 @@ import jax.numpy as jnp
 from repro.core import pagerank as pr
 from repro.core.api import LOOP_FLAGS, Method, build_initial_state, \
     distributed_pagerank
-from repro.graph.dynamic import apply_batch
+from repro.graph.dynamic import apply_batch, touched_vertices_mask
 from repro.graph.structure import EdgeListGraph
+from repro.ppr import IndexConfig, WalkIndex, build_walk_index, \
+    repair_walk_index
 from repro.serve.ingest import IngestQueue
 from repro.serve.metrics import ServeMetrics
 from repro.serve.state import RankStore
@@ -45,13 +54,23 @@ class ServeEngine:
                  store: RankStore, metrics: Optional[ServeMetrics] = None,
                  method: Method = "frontier_prune", mesh=None,
                  static_fallback_frac: float = 0.25,
-                 clock=time.monotonic, **pr_kw):
+                 ppr_index=None, clock=time.monotonic, **pr_kw):
         self.ingest = ingest
         self.store = store
         self.metrics = metrics if metrics is not None else ServeMetrics()
         self.method = method
         self.mesh = mesh
         self.static_fallback_frac = static_fallback_frac
+        # opt-in walk index (repro.ppr): an IndexConfig to build at
+        # bootstrap, or a prebuilt WalkIndex valid for `graph`
+        self._ppr_cfg: Optional[IndexConfig] = None
+        self._ppr: Optional[WalkIndex] = None
+        if isinstance(ppr_index, IndexConfig):
+            self._ppr_cfg = ppr_index
+        elif isinstance(ppr_index, WalkIndex):
+            self._ppr = ppr_index
+        elif ppr_index is not None:
+            raise TypeError("ppr_index must be an IndexConfig or WalkIndex")
         self.pr_kw = pr_kw
         self._clock = clock
         self._graph = graph
@@ -62,12 +81,18 @@ class ServeEngine:
     # ---- lifecycle -------------------------------------------------------
     def bootstrap(self, ranks: Optional[jax.Array] = None,
                   last_seq: Optional[int] = None) -> int:
-        """Publish generation 0: a cold static solve, or restored ranks."""
+        """Publish generation 0: a cold static solve, or restored ranks.
+        Builds the walk index if one was requested — sampling is a pure
+        function of (graph, config seed), so a checkpointed restart
+        reproduces the index bit-identically from the replayed graph."""
         if ranks is None:
             ranks = self._solve("static", self._graph, None, None).ranks
+        if self._ppr_cfg is not None and self._ppr is None:
+            self._ppr = build_walk_index(self._graph, self._ppr_cfg)
         self._ranks = ranks
         seq = self.ingest.start_seq - 1 if last_seq is None else last_seq
-        return self.store.publish(self._graph, ranks, seq)
+        return self.store.publish(self._graph, ranks, seq,
+                                  ppr_index=self._ppr)
 
     # ---- one micro-batch -------------------------------------------------
     def step(self, force: bool = False) -> bool:
@@ -93,14 +118,28 @@ class ServeEngine:
                     "static")
         res = self._solve(method, graph_new, batch.update, self._ranks,
                           graph_prev=self._graph, init_state=init_state)
+        resampled = 0
+        if self._ppr is not None:
+            # the same touched signal that seeds the DF frontier drives
+            # walk invalidation — stale suffixes resample on Gᵗ
+            touched = touched_vertices_mask(batch.update,
+                                            graph_new.num_vertices)
+            self._ppr, resampled = repair_walk_index(self._ppr, graph_new,
+                                                     touched)
         jax.block_until_ready(res.ranks)
+        if self._ppr is not None:
+            # repair kernels were enqueued after the rank update; the
+            # reported batch latency must cover them too
+            jax.block_until_ready(self._ppr.steps)
         latency = self._clock() - t0
         self._graph, self._ranks = graph_new, res.ranks
-        self.store.publish(graph_new, res.ranks, batch.last_seq)
+        self.store.publish(graph_new, res.ranks, batch.last_seq,
+                           ppr_index=self._ppr)
         self.metrics.record_batch(
             latency, batch.num_events, batch.num_coalesced,
             affected=int(jnp.sum(res.affected_ever)),
-            iterations=int(res.iterations), fallback=fallback)
+            iterations=int(res.iterations), fallback=fallback,
+            walks_resampled=resampled)
         return True
 
     def _solve(self, method: Method, graph_new: EdgeListGraph, update,

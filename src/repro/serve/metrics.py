@@ -39,6 +39,7 @@ class ServeMetrics:
         self.events_applied = 0
         self.events_coalesced = 0
         self.static_fallbacks = 0
+        self.walks_resampled = 0
         self._t_first_batch = None
         self._t_last_batch = None
         # queries
@@ -57,7 +58,7 @@ class ServeMetrics:
 
     def record_batch(self, latency_s: float, num_events: int,
                      num_coalesced: int, affected: int, iterations: int,
-                     fallback: bool):
+                     fallback: bool, walks_resampled: int = 0):
         now = self._clock()
         if self._t_first_batch is None:
             self._t_first_batch = now
@@ -68,6 +69,7 @@ class ServeMetrics:
         self.batch_iterations.append(int(iterations))
         self.events_applied += int(num_events)
         self.events_coalesced += int(num_coalesced)
+        self.walks_resampled += int(walks_resampled)
         if fallback:
             self.static_fallbacks += 1
 
@@ -97,6 +99,7 @@ class ServeMetrics:
             iterations_mean=(float(np.mean(self.batch_iterations))
                              if self.batch_iterations else 0.0),
             static_fallbacks=self.static_fallbacks,
+            walks_resampled=self.walks_resampled,
             admission_accepted=self.accepted,
             admission_rejected=self.rejected,
         )

@@ -17,7 +17,9 @@ Checkpointing reuses ``ft.checkpoint`` (atomic manifest + rename):
 (ranks, generation, last_seq) every ``ckpt_every`` generations.  The
 graph itself is NOT checkpointed — restart replays the event log up to
 ``last_seq`` (launch/serve.py does this), the same replay-from-stream
-contract as launch/pagerank.py.
+contract as launch/pagerank.py.  The PPR walk index is not checkpointed
+either: its sampling is a pure function of (graph, config seed), so the
+restarted engine rebuilds it bit-identically from the replayed graph.
 """
 from __future__ import annotations
 
@@ -36,6 +38,11 @@ class Snapshot(NamedTuple):
     ranks: jax.Array     # f64[V]
     generation: int      # publish counter, monotone from 0
     last_seq: int        # newest ingest seq reflected in `ranks`
+    # walk index maintained for THIS graph (repro.ppr), or None when the
+    # engine runs without one.  Riding in the snapshot gives PPR queries
+    # the same consistency contract as ranks: the index generation IS
+    # `generation`, and a query never sees an index that lags the graph.
+    ppr_index: Optional[object] = None
 
 
 class RankStore:
@@ -58,12 +65,13 @@ class RankStore:
             self._next_gen = generation
 
     def publish(self, graph: EdgeListGraph, ranks: jax.Array,
-                last_seq: int) -> int:
+                last_seq: int, ppr_index=None) -> int:
         """Swap in a new front snapshot; returns its generation."""
         with self._lock:
             gen = self._next_gen
             self._next_gen += 1
-            self._snap = Snapshot(graph, ranks, gen, int(last_seq))
+            self._snap = Snapshot(graph, ranks, gen, int(last_seq),
+                                  ppr_index)
         if self._mgr is not None:
             # gen 0 (the bootstrap snapshot) satisfies `gen % every == 0`,
             # so a restart never has to redo the cold static solve
