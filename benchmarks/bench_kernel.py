@@ -42,6 +42,31 @@ def run():
             emit(f"kernel/gated_spmv/{kind}/frac_{frac:g}", dt,
                  f"entries={entry_active}/{packed.num_entries}")
 
+    # incremental PackedGraph maintenance vs full host repack: the
+    # serving hot path applies micro-batches on device; a host rebuild
+    # is the failure mode it exists to avoid.  Measured on a larger
+    # graph than the SpMV sweep — the device update's fixed dispatch
+    # cost only amortises once the repack's O(E log E) bites
+    from repro.graph.dynamic import make_batch_update
+    from repro.graph.structure import from_coo as _from_coo
+    from repro.kernels.pagerank_spmv.update import apply_batch_packed, \
+        pack_graph
+    edges_u, n_u = rmat_edges(14, 8, seed=3)
+    gg = _from_coo(edges_u[:, 0], edges_u[:, 1], n_u,
+                   edge_capacity=len(edges_u) + 4096)
+    pk = pack_graph(gg, be=512, vb=256, spill_lanes_per_window=256)
+    dels = edges_u[rng.choice(len(edges_u), size=32, replace=False)]
+    ins = np.stack([rng.integers(0, n_u, 64), rng.integers(0, n_u, 64)], 1)
+    upd = make_batch_update(dels, ins, 64, 64)
+    t_upd, _ = time_fn(apply_batch_packed, pk, upd, check=False)
+    t_pack, _ = time_fn(pack_graph, gg, be=512, vb=256,
+                        spill_lanes_per_window=256)
+    emit("kernel/packed_update/incremental", t_upd,
+         f"entries={pk.num_entries};M={pk.max_entries_per_window}")
+    emit("kernel/packed_update/rebuild", t_pack, "")
+    emit("kernel/packed_update/speedup", 0.0,
+         f"rebuild_over_update={t_pack / max(t_upd, 1e-12):.1f}")
+
     # beyond-paper: window-sequential Gauss-Seidel (async analogue)
     import jax.numpy as _j
     from repro.core.gauss_seidel import gauss_seidel_pagerank

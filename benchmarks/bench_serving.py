@@ -10,21 +10,40 @@ burst every ``query_every`` events.  Emitted rows:
                                 events/s, p99 update latency, p99
                                 query staleness (events), mean
                                 |affected|, static fallbacks
+
+The 131k-vertex RMAT section compares the XLA f64 engine against the
+kernel engine (incremental PackedGraph maintenance + hybrid-precision
+ladder) on the same stream, emits the events/s delta per method, and
+times one incremental ``apply_batch_packed`` against a full host
+``pack_blocks`` rebuild — all registered in ``run.py --json``.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit
-from repro.data.snap import load_temporal
+from benchmarks.common import emit, time_fn
+from repro.data.snap import TemporalDataset, load_temporal
 from repro.serve import IngestQueue, QueryClient, RankStore, ServeEngine, \
     ServeMetrics, preload_graph_and_feed
 
 METHODS = ("traversal", "frontier", "frontier_prune")
+RMAT_METHODS = ("frontier", "frontier_prune")
+
+
+def _rmat_dataset(scale=17, edge_factor=4, seed=7) -> TemporalDataset:
+    """131k-vertex (scale 17) R-MAT power-law digraph as an arrival-order
+    event stream (deduplicated, shuffled)."""
+    from repro.graph.generators import rmat_edges
+    edges, n = rmat_edges(scale, edge_factor, seed=seed)
+    edges = np.unique(edges, axis=0)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    rng = np.random.default_rng(seed)
+    edges = edges[rng.permutation(len(edges))]
+    return TemporalDataset(f"rmat{n}", edges.astype(np.int32), n, True)
 
 
 def _serve_once(ds, events, method, flush_size=64, query_every=100,
-                topk=10, seed=0):
+                topk=10, seed=0, engine="xla", kernel_opts=None):
     import time
 
     graph, feed = preload_graph_and_feed(ds, events)
@@ -33,7 +52,8 @@ def _serve_once(ds, events, method, flush_size=64, query_every=100,
     ingest = IngestQueue(flush_size=flush_size, flush_interval=5e-3,
                          max_pending=max(events, 8 * flush_size))
     store = RankStore()
-    engine = ServeEngine(graph, ingest, store, method=method)
+    engine = ServeEngine(graph, ingest, store, method=method,
+                         engine=engine, kernel_opts=kernel_opts)
     engine.bootstrap()
     rng = np.random.default_rng(seed)
     # warm the compiled step so the timed run measures steady state
@@ -60,7 +80,7 @@ def _serve_once(ds, events, method, flush_size=64, query_every=100,
 
 
 def run(dataset="sx-mathoverflow", events=600, flush_size=64,
-        query_every=100):
+        query_every=100, rmat_events=320):
     ds = load_temporal(dataset)
     for method in METHODS:
         wall, n, m = _serve_once(ds, events, method, flush_size,
@@ -71,6 +91,39 @@ def run(dataset="sx-mathoverflow", events=600, flush_size=64,
              f"p99_staleness_ev={m['staleness_p99_events']:.0f};"
              f"affected={m['affected_mean']:.0f};"
              f"fallbacks={m['static_fallbacks']}")
+
+    # ---- kernel engine vs XLA engine, 131k-vertex RMAT stream ----------
+    rmat = _rmat_dataset()
+    for method in RMAT_METHODS:
+        rate = {}
+        for eng in ("xla", "kernel"):
+            wall, n, m = _serve_once(rmat, rmat_events, method, flush_size,
+                                     query_every, engine=eng)
+            rate[eng] = n / wall
+            emit(f"serving/{rmat.name}/{method}/{eng}", wall / max(1, n),
+                 f"events_per_s={rate[eng]:.1f};"
+                 f"p99_update_ms={m['update_latency_p99_ms']:.1f};"
+                 f"affected={m['affected_mean']:.0f};"
+                 f"rebuilds={m['packed_rebuilds']}")
+        emit(f"serving/{rmat.name}/{method}/kernel_vs_xla", 0.0,
+             f"events_per_s_ratio={rate['kernel'] / rate['xla']:.2f}")
+
+    # ---- incremental PackedGraph update vs full host repack ------------
+    from repro.graph.dynamic import make_batch_update
+    from repro.kernels.pagerank_spmv.update import apply_batch_packed, \
+        pack_graph
+    from repro.serve.engine import KERNEL_PACK_DEFAULTS
+    graph, feed = preload_graph_and_feed(rmat, rmat_events)
+    packed = pack_graph(graph, **KERNEL_PACK_DEFAULTS)
+    upd = make_batch_update(np.zeros((0, 2), np.int32),
+                            feed[:flush_size], 8, max(8, flush_size))
+    t_upd, _ = time_fn(apply_batch_packed, packed, upd, check=False)
+    t_pack, _ = time_fn(pack_graph, graph, **KERNEL_PACK_DEFAULTS)
+    emit(f"serving/{rmat.name}/pack_update/incremental", t_upd,
+         f"entries={packed.num_entries}")
+    emit(f"serving/{rmat.name}/pack_update/rebuild", t_pack, "")
+    emit(f"serving/{rmat.name}/pack_update/speedup", 0.0,
+         f"rebuild_over_update={t_pack / max(t_upd, 1e-12):.1f}")
 
 
 if __name__ == "__main__":

@@ -5,8 +5,14 @@ foreground thread plays "user traffic" — point-rank lookups, global
 top-k and personalized top-k — always answered from a consistent
 published snapshot.
 
-    PYTHONPATH=src python examples/online_serving.py
+    PYTHONPATH=src python examples/online_serving.py [--engine kernel]
+
+``--engine kernel`` serves from the Pallas frontier-gated path with
+device-side incremental PackedGraph maintenance; off-TPU the kernel runs
+in interpret mode (``use_kernel=True`` below forces it even on CPU so CI
+smoke-tests the real kernel body, not the jnp oracle).
 """
+import argparse
 import time
 
 import numpy as np
@@ -17,6 +23,10 @@ from repro.graph.structure import from_coo
 from repro.serve import (IngestQueue, QueryClient, RankStore, ServeEngine,
                          ServeMetrics)
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--engine", default="xla", choices=["xla", "kernel"])
+args = ap.parse_args()
+
 edges, n = rmat_edges(11, 8, seed=42)
 graph = from_coo(edges[:, 0], edges[:, 1], n,
                  edge_capacity=len(edges) + 4096)
@@ -25,7 +35,8 @@ metrics = ServeMetrics()
 ingest = IngestQueue(flush_size=64, flush_interval=0.02, max_pending=4096)
 store = RankStore()
 engine = ServeEngine(graph, ingest, store, metrics=metrics,
-                     method="frontier_prune")
+                     method="frontier_prune", engine=args.engine,
+                     kernel_opts=dict(use_kernel=True, be=256, vb=256))
 engine.bootstrap()
 client = QueryClient(store, ingest, metrics)
 
@@ -53,3 +64,4 @@ ppr = client.personalized_top_k(seeds=[0, 1, 2], k=5)
 print("personalized top5 from {0,1,2}:", ppr.vertices.tolist())
 print("metrics:", {k: round(v, 2) if isinstance(v, float) else v
                    for k, v in metrics.as_dict().items()})
+print("serving example complete")

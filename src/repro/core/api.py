@@ -16,8 +16,10 @@ from repro.graph.dynamic import BatchUpdate, apply_batch, touched_vertices_mask
 from repro.graph.structure import EdgeListGraph
 
 Method = Literal["static", "naive", "traversal", "frontier", "frontier_prune"]
+Engine = Literal["xla", "kernel"]
 
 METHODS = ("static", "naive", "traversal", "frontier", "frontier_prune")
+ENGINES = ("xla", "kernel")
 
 # per-method flags for the one `_pagerank_loop` behind all five approaches
 # (core/pagerank.py docstring table); shared by the single-device path and
@@ -29,6 +31,13 @@ LOOP_FLAGS = {
     "frontier": dict(expand=True),
     "frontier_prune": dict(expand=True, prune=True, closed_form=True),
 }
+
+# the same table for the kernel engine's loops, which have no
+# track_affected knob (they always need affected_ever for the f64 polish)
+KERNEL_FLAGS = {m: {k: v for k, v in f.items() if k != "track_affected"}
+                for m, f in LOOP_FLAGS.items()}
+for _f in KERNEL_FLAGS.values():          # kernel loop defaults expand=True
+    _f.setdefault("expand", False)
 
 # one compiled distributed engine per (mesh, graph shape, method options);
 # FIFO-bounded so shape sweeps don't pin compiled executables forever
@@ -115,18 +124,41 @@ def update_pagerank(graph_prev: EdgeListGraph,
                     prev_ranks: Optional[jax.Array],
                     method: Method = "frontier_prune",
                     mesh=None,
+                    engine: Engine = "xla",
+                    packed=None,
                     **kw) -> pr.PageRankResult:
     """Recompute ranks for Gᵗ given Gᵗ⁻¹, Δᵗ and Rᵗ⁻¹ with the chosen method.
 
     ``mesh``: optional jax Mesh (with a ``model`` axis) — dispatches to the
     shard_map distributed engine (repro.dist.pagerank_dist) instead of the
     single-device loop.
+
+    ``engine="kernel"``: single-pod Pallas hot path — hybrid-precision
+    f32 frontier-gated SpMV iterations + f64 polish (core.kernel_engine),
+    same ``PageRankResult`` contract.  ``packed`` supplies the blocked
+    structure for streaming callers that maintain it incrementally
+    (``kernels.pagerank_spmv.update.apply_batch_packed``); when omitted a
+    one-shot ``pack_graph`` bootstrap is done here.
     """
     if mesh is not None:
+        if engine == "kernel":
+            raise ValueError("engine='kernel' is the single-pod path; "
+                             "drop mesh= or use engine='xla'")
         return distributed_pagerank(graph_prev, graph_new, update,
                                     prev_ranks, method, mesh, **kw)
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; options {ENGINES}")
     init_ranks, init_affected = build_initial_state(
         graph_prev, graph_new, update, prev_ranks, method)
+    if engine == "kernel":
+        from repro.core.kernel_engine import hybrid_pagerank
+        from repro.kernels.pagerank_spmv.update import pack_graph
+        if packed is None:
+            # spill >= 1 guarantees every window owns an entry, so every
+            # active window has a block the kernel writes (zeros included)
+            packed = pack_graph(graph_new, spill_lanes_per_window=1)
+        return hybrid_pagerank(graph_new, packed, init_ranks, init_affected,
+                               **KERNEL_FLAGS[method], **kw)
     return pr._pagerank_loop(graph_new, init_ranks, init_affected,
                              **LOOP_FLAGS[method], **kw)
 

@@ -3,27 +3,53 @@
 This is the single-pod *performance path*: contributions come from the
 blocked, window-gated SpMV (f32, MXU scatter) instead of the XLA
 segment_sum (f64).  Frontier marking still uses the edge-list ``push_or``
-(boolean propagation is cheap).  Tolerances default to f32-appropriate
-values; fixed points agree with the f64 engine to f32 precision (tested).
+(boolean propagation is cheap).
+
+Two precision regimes:
+
+  * ``kernel_pagerank_loop`` — pure f32, tolerances default to
+    f32-appropriate values; fixed points agree with the f64 engine to
+    f32 precision.  The loop keeps its rank buffer *padded* to NW·VB and
+    receives a precomputed ``active_window`` per iteration, so the
+    while_loop body pays no pad/reduce/slice glue around the kernel.
+  * ``hybrid_pagerank`` — the serving ladder: f32 kernel iterations to
+    ``tol_f32``, then a short f64 XLA polish seeded with the kernel
+    phase's ``affected_ever`` set, down to the paper's τ.  The result is
+    a drop-in ``PageRankResult`` meeting the tier-1 L∞ ≤ 1e-6
+    equivalence contracts of the f64 engine (DESIGN.md §8).
+
+Work accounting matches the kernel's actual granularity: per iteration,
+``edges_processed`` adds the live-edge counts of *active entries* and
+``vertices_processed`` adds VB per active window — what the gated SpMV
+really gathers/updates, comparable against ``PageRankResult``'s
+per-vertex numbers from the XLA engine.
 """
 from __future__ import annotations
 
+import collections
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import pagerank as pr
 from repro.core.pagerank import ALPHA, initial_affected
 from repro.graph.structure import EdgeListGraph
 from repro.kernels.pagerank_spmv.ops import PackedGraph, gated_contrib
 
+# trace-time counters (see kernels.pagerank_spmv.update.TRACE_COUNTS):
+# a temporal stream must compile the loop once and never again
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
 
 class KernelPRResult(NamedTuple):
-    ranks: jax.Array
+    ranks: jax.Array             # f32[V]
     iterations: jax.Array
     delta: jax.Array
     affected_ever: jax.Array
+    edges_processed: jax.Array   # i64[] Σ live edges of active entries
+    vertices_processed: jax.Array  # i64[] Σ VB per active window
 
 
 @partial(jax.jit, static_argnames=("closed_form", "prune", "expand",
@@ -35,23 +61,33 @@ def kernel_pagerank_loop(graph: EdgeListGraph, packed: PackedGraph,
                          max_iter: int = 500, closed_form: bool = False,
                          prune: bool = False, expand: bool = True,
                          use_kernel: bool = True) -> KernelPRResult:
+    TRACE_COUNTS["kernel_pagerank_loop"] += 1          # trace-time only
     V = graph.num_vertices
+    nw, vb = packed.num_windows, packed.vb
+    v_pad = nw * vb
     deg = graph.out_degree(include_self_loop=True)
-    inv_deg = (1.0 / deg).astype(jnp.float32)
+    inv_deg_pad = jnp.pad((1.0 / deg).astype(jnp.float32), (0, v_pad - V))
+    # per-entry live-edge counts: constant across the loop (the packed
+    # structure only changes between solves), so the per-iteration work
+    # counter is an O(NE) masked sum, not an O(NE·BE) rescan
+    entry_edges = jnp.sum((packed.valid > 0), axis=1).astype(jnp.int64)
     c0 = jnp.float32((1.0 - alpha) / V)
-    alpha = jnp.float32(alpha)
+    a32 = jnp.float32(alpha)
 
     def body(state):
-        ranks, affected, ever, _, it = state
-        contrib = gated_contrib(packed, ranks, inv_deg, affected,
-                                use_kernel=use_kernel)
+        ranks_pad, affected, ever, _, it, edges, verts = state
+        aff_pad = jnp.pad(affected, (0, v_pad - V))
+        active_window = jnp.any(aff_pad.reshape(nw, vb), axis=1)
+        contrib = gated_contrib(packed, ranks_pad, inv_deg_pad,
+                                active_window=active_window,
+                                use_kernel=use_kernel, pad_out=True)
         if closed_form:
-            r_new_all = (c0 + alpha * contrib) / (1.0 - alpha * inv_deg)
+            r_new_all = (c0 + a32 * contrib) / (1.0 - a32 * inv_deg_pad)
         else:
-            r_new_all = c0 + alpha * (contrib + ranks * inv_deg)
-        r_new = jnp.where(affected, r_new_all, ranks)
-        dr = jnp.abs(r_new - ranks)
-        rel = dr / jnp.maximum(jnp.maximum(r_new, ranks), 1e-30)
+            r_new_all = c0 + a32 * (contrib + ranks_pad * inv_deg_pad)
+        r_new = jnp.where(aff_pad, r_new_all, ranks_pad)
+        dr = jnp.abs(r_new - ranks_pad)[:V]
+        rel = dr / jnp.maximum(jnp.maximum(r_new[:V], ranks_pad[:V]), 1e-30)
         delta = jnp.max(jnp.where(affected, dr, 0.0))
         new_affected = affected
         if prune:
@@ -59,15 +95,60 @@ def kernel_pagerank_loop(graph: EdgeListGraph, packed: PackedGraph,
         if expand:
             big = affected & (rel > frontier_tol)
             new_affected = new_affected | graph.push_or(big) | big
-        return (r_new, new_affected, ever | new_affected, delta, it + 1)
+        edges = edges + jnp.sum(
+            jnp.where(active_window[packed.window], entry_edges, 0))
+        verts = verts + jnp.sum(active_window.astype(jnp.int64)) * vb
+        return (r_new, new_affected, ever | new_affected, delta, it + 1,
+                edges, verts)
 
     def cond(state):
         return (state[3] > tol) & (state[4] < max_iter)
 
-    state0 = (init_ranks.astype(jnp.float32), init_affected, init_affected,
-              jnp.asarray(jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32))
-    ranks, _, ever, delta, it = jax.lax.while_loop(cond, body, state0)
-    return KernelPRResult(ranks, it, delta, ever)
+    state0 = (jnp.pad(init_ranks.astype(jnp.float32), (0, v_pad - V)),
+              init_affected, init_affected,
+              jnp.asarray(jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32),
+              jnp.asarray(0, jnp.int64), jnp.asarray(0, jnp.int64))
+    ranks_pad, _, ever, delta, it, edges, verts = jax.lax.while_loop(
+        cond, body, state0)
+    return KernelPRResult(ranks_pad[:V], it, delta, ever, edges, verts)
+
+
+def hybrid_pagerank(graph: EdgeListGraph, packed: PackedGraph,
+                    init_ranks: jax.Array, init_affected: jax.Array, *,
+                    alpha: float = ALPHA, tol: float = pr.TOL,
+                    tol_f32: float = 1e-7,
+                    frontier_tol: float = pr.FRONTIER_TOL,
+                    prune_tol: float = pr.PRUNE_TOL,
+                    kernel_frontier_tol: float = 1e-5,
+                    kernel_prune_tol: float = 1e-5,
+                    max_iter: int = pr.MAX_ITER, closed_form: bool = False,
+                    prune: bool = False, expand: bool = True,
+                    polish: bool = True, use_kernel: bool = True
+                    ) -> pr.PageRankResult:
+    """Precision ladder: f32 kernel iterations to ``tol_f32``, then an
+    optional f64 XLA polish seeded from the kernel phase's affected_ever
+    set down to ``tol`` — same fixed point and result type as the f64
+    engine, with the bulk of the iterations on the gated f32 path."""
+    k = kernel_pagerank_loop(graph, packed, init_ranks, init_affected,
+                             alpha=alpha, tol=tol_f32,
+                             frontier_tol=kernel_frontier_tol,
+                             prune_tol=kernel_prune_tol, max_iter=max_iter,
+                             closed_form=closed_form, prune=prune,
+                             expand=expand, use_kernel=use_kernel)
+    if not polish:
+        return pr.PageRankResult(k.ranks.astype(jnp.float64), k.iterations,
+                                 k.delta.astype(jnp.float64),
+                                 k.affected_ever, k.edges_processed,
+                                 k.vertices_processed)
+    p = pr._pagerank_loop(graph, k.ranks.astype(jnp.float64),
+                          k.affected_ever, alpha=alpha, tol=tol,
+                          frontier_tol=frontier_tol, prune_tol=prune_tol,
+                          max_iter=max_iter, closed_form=closed_form,
+                          prune=prune, expand=expand)
+    return pr.PageRankResult(p.ranks, k.iterations + p.iterations, p.delta,
+                             k.affected_ever | p.affected_ever,
+                             k.edges_processed + p.edges_processed,
+                             k.vertices_processed + p.vertices_processed)
 
 
 def df_pagerank_kernel(graph_prev: EdgeListGraph, graph_new: EdgeListGraph,

@@ -6,12 +6,16 @@ kernel body executes in Python/XLA for bit-level validation against
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.pagerank_spmv.pagerank_spmv import (
-    DEFAULT_BE, DEFAULT_VB, PackedGraph, frontier_spmv, pack_blocks)
-from repro.kernels.pagerank_spmv.ref import frontier_spmv_ref
+    DEFAULT_BE, DEFAULT_VB, PackedGraph, frontier_spmv,
+    frontier_spmv_padded, pack_blocks)
+from repro.kernels.pagerank_spmv.ref import (frontier_spmv_ref,
+                                             frontier_spmv_ref_padded)
 
 __all__ = ["PackedGraph", "pack_blocks", "gated_contrib", "DEFAULT_BE",
            "DEFAULT_VB"]
@@ -22,22 +26,37 @@ def _on_tpu() -> bool:
 
 
 def gated_contrib(packed: PackedGraph, ranks: jax.Array, inv_deg: jax.Array,
-                  affected: jax.Array, *, use_kernel: bool = True
+                  affected: Optional[jax.Array] = None, *,
+                  active_window: Optional[jax.Array] = None,
+                  use_kernel: bool = True, pad_out: bool = False
                   ) -> jax.Array:
     """contrib[v] = Σ_{u→v, u≠v} R[u]/d_u for v in active windows, else 0.
 
-    ``affected``: bool[V] vertex mask — reduced to window granularity here.
+    Gating granularity: either ``affected`` (bool[V] vertex mask, reduced
+    to windows here — the one-shot convenience form) or a precomputed
+    ``active_window`` (bool[NW]).  An iteration loop should pass
+    ``active_window`` plus *pre-padded* ``ranks``/``inv_deg`` (length
+    NW*VB) and ``pad_out=True`` so no pad/reduce/slice is re-done inside
+    the while_loop body on every call.
     """
     nw = packed.num_windows
     vb = packed.vb
     v_pad = nw * vb
-    aff_pad = jnp.pad(affected, (0, v_pad - affected.shape[0]))
-    active_window = jnp.any(aff_pad.reshape(nw, vb), axis=1)
+    if active_window is None:
+        if affected is None:
+            raise ValueError("need affected or active_window")
+        aff = affected
+        if aff.shape[0] != v_pad:
+            aff = jnp.pad(aff, (0, v_pad - aff.shape[0]))
+        active_window = jnp.any(aff.reshape(nw, vb), axis=1)
     rsc = (ranks * inv_deg).astype(jnp.float32)
-    rsc = jnp.pad(rsc, (0, v_pad - rsc.shape[0]))
+    if rsc.shape[0] != v_pad:
+        rsc = jnp.pad(rsc, (0, v_pad - rsc.shape[0]))
     if use_kernel:
-        return frontier_spmv(packed, rsc, active_window,
-                             interpret=not _on_tpu())
-    return frontier_spmv_ref(packed.src, packed.dst_rel, packed.valid,
-                             packed.window, rsc, active_window,
-                             packed.num_vertices, vb)
+        out = frontier_spmv_padded(packed, rsc, active_window,
+                                   interpret=not _on_tpu())
+    else:
+        out = frontier_spmv_ref_padded(packed.src, packed.dst_rel,
+                                       packed.valid, packed.window, rsc,
+                                       active_window, vb)
+    return out if pad_out else out[: packed.num_vertices]

@@ -41,18 +41,49 @@ DEFAULT_BE = 2048     # edges per entry (paper's OpenMP chunk size)
 DEFAULT_VB = 256      # vertices per dst window (2 × 128 lanes)
 
 
+LANE_SENTINEL = np.iinfo(np.int64).max   # key of a never-live lane
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PackedGraph:
-    """Host-packed blocked edge structure (rebuilt per batch update)."""
+    """Blocked edge structure: host-packed bootstrap, device-maintained.
+
+    Entries stay sorted by window (same-window entries are contiguous in
+    flat order — the kernel's overwrite/accumulate run detection depends
+    on it) and ``window``/``entry_start`` never change after packing;
+    incremental updates (``update.apply_batch_packed``) only flip lanes.
+
+    The last four arrays form the *edge locator* the incremental update
+    searches instead of scanning lanes: ``sorted_key``/``sorted_lane``
+    index the pack-time lanes by (src·V + dst) key for binary search, and
+    ``ovl_key``/``ovl_lane`` are an append-only overlay recording every
+    lane claimed by an insertion since the last pack.  Locator hits are
+    *candidates* — a lane may have been freed and reclaimed for another
+    edge — so lookups verify the lane's current contents; every live edge
+    is findable through one of the two (pack-time lanes via the base
+    index, inserted lanes via the overlay).  A full overlay is a checked
+    error that callers resolve by repacking (which rebuilds the base
+    index and empties the overlay).
+    """
 
     src: jax.Array        # int32[NE, BE]
     dst_rel: jax.Array    # int32[NE, BE]   dst - window*VB
     valid: jax.Array      # f32[NE, BE]     1.0 live / 0.0 pad
     window: jax.Array     # int32[NE]       window id per entry
+    entry_start: jax.Array  # int32[NW+1]   window w owns entries
+    #                       [entry_start[w], entry_start[w+1])
+    sorted_key: jax.Array   # int64[NE*BE]  pack-time lane keys, ascending
+    sorted_lane: jax.Array  # int32[NE*BE]  flat lane id per sorted key
+    ovl_key: jax.Array      # int64[K]      keys inserted since the pack
+    ovl_lane: jax.Array     # int32[K]      lane each insertion claimed
     num_vertices: int = dataclasses.field(metadata=dict(static=True))
     vb: int = dataclasses.field(metadata=dict(static=True))
     be: int = dataclasses.field(metadata=dict(static=True))
+    # max entries any one window owns — bounds the per-window free-slot
+    # scan of the incremental update (static so gather shapes stay fixed)
+    max_entries_per_window: int = dataclasses.field(
+        default=1, metadata=dict(static=True))
 
     @property
     def num_entries(self) -> int:
@@ -62,54 +93,116 @@ class PackedGraph:
     def num_windows(self) -> int:
         return -(-self.num_vertices // self.vb)
 
+    @property
+    def overlay_capacity(self) -> int:
+        return self.ovl_key.shape[0]
+
 
 def pack_blocks(src: np.ndarray, dst: np.ndarray, valid: np.ndarray,
                 num_vertices: int, be: int = DEFAULT_BE,
-                vb: int = DEFAULT_VB, num_entries: int | None = None
-                ) -> PackedGraph:
+                vb: int = DEFAULT_VB, num_entries: int | None = None,
+                spill_lanes_per_window: int = 0,
+                extra_entries: int = 0,
+                overlay_capacity: int = 1024,
+                max_entries_per_window: int | None = None) -> PackedGraph:
     """Group live edges by dst window, split each group into BE-edge entries.
 
-    ``num_entries`` pins the entry capacity so a temporal stream keeps one
-    compiled kernel across batches (pad with empty entries).
+    Fully vectorised (one stable argsort + one scatter — no Python loop
+    over windows, empty or not).  ``num_entries`` pins the entry capacity
+    so a temporal stream keeps one compiled kernel across batches; excess
+    capacity is appended as empty entries owned by the *last* window so
+    the window array stays sorted (a window-0 tail would break the
+    kernel's first-entry-of-run overwrite when window 0 is active).
+
+    ``spill_lanes_per_window`` guarantees every window owns at least that
+    many free (padded) lanes, adding whole empty entries where the last
+    partial entry's slack is not enough — headroom for
+    ``update.apply_batch_packed`` to claim insertion slots without a host
+    repack.  Windows with no edges get entries too, so every window is
+    insertable and every active window has a block the kernel writes.
+
+    ``extra_entries`` (ignored when ``num_entries`` pins the capacity)
+    appends that many additional empty tail entries, owned by the *last*
+    window until a repack at the same total capacity redistributes them
+    to whichever windows grew — size it to match the edge list's spare
+    ``edge_capacity`` so repacks keep fitting as the graph grows (the
+    spill guarantee itself may stop fitting under skewed growth; stream
+    owners degrade it on repack, see ``serve.engine.ServeEngine``).
+
+    ``overlay_capacity`` sizes the insertion overlay of the edge locator
+    (see ``PackedGraph``): how many insertions ``apply_batch_packed`` can
+    absorb before the stream owner must repack.
+
+    ``max_entries_per_window`` pins the static per-window entry bound (a
+    jit shape): a stream owner repacking mid-stream must pass the value
+    pinned at bootstrap or the compiled update/kernel retrace.  It must
+    cover the widest window of *this* pack (checked); ``num_entries``
+    (every window can at most own all entries) is always a safe pin.
     """
-    src = np.asarray(src)[np.asarray(valid)]
-    dst = np.asarray(dst)[np.asarray(valid)]
+    src = np.asarray(src, np.int32)[np.asarray(valid, bool)]
+    dst = np.asarray(dst, np.int32)[np.asarray(valid, bool)]
     order = np.argsort(dst, kind="stable")
     src, dst = src[order], dst[order]
     win = dst // vb
     nw = -(-num_vertices // vb)
 
-    entries_src, entries_dst, entries_val, entries_win = [], [], [], []
-    for w in range(nw):
-        lo, hi = np.searchsorted(win, w), np.searchsorted(win, w + 1)
-        for off in range(lo, hi, be):
-            chunk = slice(off, min(off + be, hi))
-            n = chunk.stop - chunk.start
-            s = np.zeros(be, np.int32)
-            d = np.zeros(be, np.int32)
-            v = np.zeros(be, np.float32)
-            s[:n] = src[chunk]
-            d[:n] = dst[chunk] - w * vb
-            v[:n] = 1.0
-            entries_src.append(s)
-            entries_dst.append(d)
-            entries_val.append(v)
-            entries_win.append(w)
-    ne = len(entries_src)
-    cap = num_entries if num_entries is not None else max(ne, 1)
+    counts = np.bincount(win, minlength=nw).astype(np.int64)
+    n_base = -(-counts // be)                        # ceil, 0 for empty
+    slack = n_base * be - counts
+    need = np.maximum(0, spill_lanes_per_window - slack)
+    n_w = n_base + -(-need // be)                    # entries per window
+    offsets = np.concatenate([[0], np.cumsum(n_w)])
+    ne = int(offsets[-1])
+    cap = (num_entries if num_entries is not None
+           else max(ne + max(0, extra_entries), 1))
     if ne > cap:
-        raise ValueError(f"{ne} entries exceed capacity {cap}")
-    for _ in range(cap - ne):
-        entries_src.append(np.zeros(be, np.int32))
-        entries_dst.append(np.zeros(be, np.int32))
-        entries_val.append(np.zeros(be, np.float32))
-        entries_win.append(0)
+        raise ValueError(
+            f"{ne} entries exceed capacity {cap}; raise num_entries or "
+            "shrink spill_lanes_per_window (capacity sizing: DESIGN.md §8)")
+
+    s = np.zeros((cap, be), np.int32)
+    d = np.zeros((cap, be), np.int32)
+    v = np.zeros((cap, be), np.float32)
+    # rank of each (dst-sorted) edge within its window -> (entry, lane)
+    edge_start = np.concatenate([[0], np.cumsum(counts)])[:-1]
+    rank = np.arange(len(dst), dtype=np.int64) - edge_start[win]
+    entry_idx = offsets[win] + rank // be
+    lane_idx = rank % be
+    s[entry_idx, lane_idx] = src
+    d[entry_idx, lane_idx] = dst - win * vb
+    v[entry_idx, lane_idx] = 1.0
+
+    # entry -> window map; capacity tail belongs to the last window
+    window = np.full(cap, nw - 1, np.int32)
+    window[:ne] = np.repeat(np.arange(nw, dtype=np.int32), n_w)
+    entry_start = offsets.astype(np.int32).copy()
+    entry_start[nw] = cap
+    owned = np.diff(entry_start.astype(np.int64))
+
+    # edge locator: pack-time lanes sorted by key + an empty overlay
+    lane_key = np.full(cap * be, LANE_SENTINEL, np.int64)
+    flat = entry_idx * be + lane_idx
+    lane_key[flat] = src.astype(np.int64) * num_vertices + dst
+    order = np.argsort(lane_key)
+    widest = max(1, int(owned.max()))
+    if max_entries_per_window is None:
+        max_entries_per_window = widest
+    elif widest > max_entries_per_window:
+        raise ValueError(
+            f"{widest} entries in one window exceed the pinned "
+            f"max_entries_per_window {max_entries_per_window}")
     return PackedGraph(
-        src=jnp.asarray(np.stack(entries_src)),
-        dst_rel=jnp.asarray(np.stack(entries_dst)),
-        valid=jnp.asarray(np.stack(entries_val)),
-        window=jnp.asarray(np.asarray(entries_win, np.int32)),
-        num_vertices=num_vertices, vb=vb, be=be)
+        src=jnp.asarray(s),
+        dst_rel=jnp.asarray(d),
+        valid=jnp.asarray(v),
+        window=jnp.asarray(window),
+        entry_start=jnp.asarray(entry_start),
+        sorted_key=jnp.asarray(lane_key[order]),
+        sorted_lane=jnp.asarray(order.astype(np.int32)),
+        ovl_key=jnp.full((overlay_capacity,), LANE_SENTINEL, jnp.int64),
+        ovl_lane=jnp.zeros((overlay_capacity,), jnp.int32),
+        num_vertices=num_vertices, vb=vb, be=be,
+        max_entries_per_window=max_entries_per_window)
 
 
 # ---------------------------------------------------------------------------
@@ -143,13 +236,15 @@ def _kernel(sel_ref, win_ref, first_ref, nact_ref,     # scalar prefetch
 
 
 @partial(jax.jit, static_argnames=("interpret",))
-def frontier_spmv(packed: PackedGraph, rsc: jax.Array,
-                  active_window: jax.Array, *, interpret: bool = False
-                  ) -> jax.Array:
-    """Gated blocked SpMV.  Returns f32[num_vertices] contributions.
+def frontier_spmv_padded(packed: PackedGraph, rsc: jax.Array,
+                         active_window: jax.Array, *,
+                         interpret: bool = False) -> jax.Array:
+    """Gated blocked SpMV on pre-padded buffers.  Returns f32[V_pad]
+    contributions (V_pad = NW*VB); inactive windows are zeroed.
 
-    rsc: f32/bf16[V_pad] scaled ranks R/d (V_pad = NW*VB);
-    active_window: bool[NW].
+    rsc: f32/bf16[V_pad] scaled ranks R/d — already padded, so an
+    iteration loop that keeps its rank buffer padded pays no per-call
+    pad/slice; active_window: bool[NW], precomputed by the caller.
     """
     ne, be = packed.src.shape
     vb = packed.vb
@@ -199,8 +294,16 @@ def frontier_spmv(packed: PackedGraph, rsc: jax.Array,
         interpret=interpret,
     )(sel_eff, win_eff, first, nact_arr,
       packed.src, packed.dst_rel, packed.valid, rsc)
-    contrib = out.reshape(-1)[: packed.num_vertices]
     # inactive windows are never visited -> their blocks are undefined;
     # the contract (and the engine) wants zeros there.
-    vmask = jnp.repeat(active_window, vb)[: packed.num_vertices]
-    return jnp.where(vmask, contrib, 0.0)
+    vmask = jnp.repeat(active_window, vb)
+    return jnp.where(vmask, out.reshape(-1), 0.0)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def frontier_spmv(packed: PackedGraph, rsc: jax.Array,
+                  active_window: jax.Array, *, interpret: bool = False
+                  ) -> jax.Array:
+    """Gated blocked SpMV.  Returns f32[num_vertices] contributions."""
+    return frontier_spmv_padded(packed, rsc, active_window,
+                                interpret=interpret)[: packed.num_vertices]

@@ -15,16 +15,22 @@ import jax.numpy as jnp
 import jax
 
 
-def frontier_spmv_ref(src, dst_rel, valid, window, rsc, active_window,
-                      num_vertices: int, vb: int):
+def frontier_spmv_ref_padded(src, dst_rel, valid, window, rsc,
+                             active_window, vb: int):
     """src/dst_rel/valid: [NE, BE]; window: int32[NE]; rsc: f[V_pad];
-    active_window: bool[NW].  Returns f[num_vertices]."""
+    active_window: bool[NW].  Returns f[NW*VB] (inactive windows zero)."""
     ne, be = src.shape
     nw = active_window.shape[0]
     w = rsc[src.reshape(-1)].reshape(ne, be) * valid.astype(rsc.dtype)
     entry_active = active_window[window]
     w = w * entry_active[:, None].astype(rsc.dtype)
     flat_dst = window[:, None] * vb + dst_rel       # [NE, BE] global dst idx
-    out = jax.ops.segment_sum(
+    return jax.ops.segment_sum(
         w.reshape(-1), flat_dst.reshape(-1), num_segments=nw * vb)
-    return out[:num_vertices]
+
+
+def frontier_spmv_ref(src, dst_rel, valid, window, rsc, active_window,
+                      num_vertices: int, vb: int):
+    """As above, truncated to f[num_vertices]."""
+    return frontier_spmv_ref_padded(src, dst_rel, valid, window, rsc,
+                                    active_window, vb)[:num_vertices]

@@ -1,0 +1,205 @@
+"""Incremental, jit-able ``PackedGraph`` maintenance.
+
+``apply_batch_packed`` mirrors ``graph.dynamic.apply_batch`` on the
+*blocked* structure the frontier-gated kernel consumes, so a temporal
+stream never pays the host-side ``pack_blocks`` rebuild per micro-batch
+(the "full recompute per update" failure mode incremental maintenance
+must avoid — Bahmani et al., Zhang et al.):
+
+  * lookups (deletion targets, duplicate-insert checks) go through the
+    packed structure's *edge locator*: binary search over the pack-time
+    ``sorted_key`` index plus a linear probe of the small insertion
+    overlay, each candidate verified against the lane's current
+    ``(src, dst_rel, window)`` contents — O(|Δ|·log L), never a scan of
+    all lanes;
+  * deletion (u, v): flip the verified lane's ``valid`` to 0 — no-op if
+    absent;
+  * insertion (u, v): the k-th kept insertion into a dst window claims
+    that window's k-th free lane — the slack of its last partial entry
+    plus the spill entries ``pack_blocks(spill_lanes_per_window=...)``
+    reserved — found by a per-window scan over entry free counts
+    (bounded by ``max_entries_per_window``, a static shape), and is
+    recorded in the overlay so later batches can find it;
+  * ``window``/``entry_start``/``sorted_*`` and every array shape are
+    untouched, so one compiled update *and* one compiled kernel loop
+    serve the whole stream (asserted via ``TRACE_COUNTS`` in tests).
+
+Running out of free lanes in a window ("spill exhaustion") or of overlay
+slots is a checked error: the device function counts dropped insertions
+and the host wrapper raises the same message shape as ``pack_blocks``
+capacity overflow.  Callers that want to keep going repack with
+``pack_graph`` (which defragments freed lanes, rebuilds the base index
+and empties the overlay) — the serve engine does exactly that.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.dynamic import BatchUpdate
+from repro.graph.structure import EdgeListGraph
+from repro.kernels.pagerank_spmv.pagerank_spmv import (
+    DEFAULT_BE, DEFAULT_VB, LANE_SENTINEL, PackedGraph, pack_blocks)
+
+__all__ = ["apply_batch_packed", "pack_graph", "packed_edge_set",
+           "TRACE_COUNTS"]
+
+# retracing telemetry: incremented at trace time (not per call), so a
+# temporal stream can assert "one compiled update, no recompiles"
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def pack_graph(graph: EdgeListGraph, *, be: int = DEFAULT_BE,
+               vb: int = DEFAULT_VB, num_entries: int | None = None,
+               spill_lanes_per_window: int = 0,
+               extra_entries: int = 0,
+               overlay_capacity: int = 1024,
+               max_entries_per_window: int | None = None) -> PackedGraph:
+    """Host-side bootstrap/repack: EdgeListGraph -> PackedGraph."""
+    return pack_blocks(np.asarray(graph.src), np.asarray(graph.dst),
+                       np.asarray(graph.valid), graph.num_vertices,
+                       be=be, vb=vb, num_entries=num_entries,
+                       spill_lanes_per_window=spill_lanes_per_window,
+                       extra_entries=extra_entries,
+                       overlay_capacity=overlay_capacity,
+                       max_entries_per_window=max_entries_per_window)
+
+
+def packed_edge_set(packed: PackedGraph) -> set:
+    """Host-side set of live (src, dst) pairs — the parity oracle."""
+    src = np.asarray(packed.src)
+    dst = (np.asarray(packed.window)[:, None] * packed.vb
+           + np.asarray(packed.dst_rel))
+    live = np.asarray(packed.valid) > 0
+    return set(zip(src[live].tolist(), dst[live].tolist()))
+
+
+@jax.jit
+def _apply_batch_packed(packed: PackedGraph, update: BatchUpdate):
+    TRACE_COUNTS["apply_batch_packed"] += 1            # trace-time only
+    V = packed.num_vertices
+    vb, be = packed.vb, packed.be
+    M = packed.max_entries_per_window
+    ne = packed.num_entries
+    L = ne * be                                        # lanes; L = drop
+    K = packed.overlay_capacity
+    src_flat = packed.src.reshape(-1)
+    rel_flat = packed.dst_rel.reshape(-1)
+    valid = packed.valid.reshape(-1)
+
+    def locate(key, u, v, live):
+        """Flat lane currently holding edge (u, v), else L.
+
+        Locator candidates (base binary search + overlay probe) are
+        verified against the lanes' current contents and liveness.
+        """
+        def verify(lane, ok):
+            lane_c = jnp.clip(lane, 0, L - 1)
+            d = (packed.window[lane_c // be] * vb + rel_flat[lane_c])
+            return (ok & (src_flat[lane_c] == u) & (d == v)
+                    & (live[lane_c] > 0))
+
+        pos = jnp.clip(jnp.searchsorted(packed.sorted_key, key), 0, L - 1)
+        base_lane = packed.sorted_lane[pos]
+        base_ok = verify(base_lane, jnp.asarray(True))
+        ovl_hit = verify(packed.ovl_lane, packed.ovl_key == key)  # [K]
+        ovl_lane = packed.ovl_lane[jnp.argmax(ovl_hit)]
+        # a live edge occupies exactly one lane, so at most one verifies
+        return jnp.where(base_ok, base_lane,
+                         jnp.where(jnp.any(ovl_hit), ovl_lane, L))
+
+    # ---- deletions ------------------------------------------------------
+    del_key = (update.del_src.astype(jnp.int64) * V + update.del_dst)
+    del_t = jax.vmap(lambda k, u, v, m: jnp.where(
+        m, locate(k, u, v, valid), L))(
+            del_key, update.del_src, update.del_dst, update.del_mask)
+    valid = valid.at[del_t].set(0.0, mode="drop")
+
+    # ---- insertions -----------------------------------------------------
+    ins_w = update.ins_dst // vb
+    ins_rel = update.ins_dst - ins_w * vb
+    ins_key = (update.ins_src.astype(jnp.int64) * V + update.ins_dst)
+    # duplicate-of-live check against the post-deletion lanes, so a
+    # delete+reinsert of one edge within a batch lands back in a window
+    dup = jax.vmap(lambda k, u, v: locate(k, u, v, valid) < L)(
+        ins_key, update.ins_src, update.ins_dst)
+    keep = update.ins_mask & ~dup
+    # de-dup within the batch itself (same scheme as apply_batch)
+    key = jnp.where(keep, ins_key, -1)
+    sorted_key = jnp.sort(key)
+    first = jnp.concatenate(
+        [jnp.array([True]), sorted_key[1:] != sorted_key[:-1]])
+    order = jnp.argsort(key)
+    keep = keep & jnp.zeros_like(keep).at[order].set(
+        first & (sorted_key >= 0))
+    # k-th kept insertion into a window -> that window's k-th free lane
+    icap = keep.shape[0]
+    i = jnp.arange(icap)
+    rank = jnp.sum(keep[None, :] & (ins_w[None, :] == ins_w[:, None])
+                   & (i[None, :] < i[:, None]), axis=1)
+
+    # per-window free-slot scan: entry free counts -> (entry, lane). All
+    # shapes are O(|Δ|·M) / O(|Δ|·BE) — hub windows with many entries
+    # only widen the tiny M axis, nothing rescans the full lane array.
+    free_cnt = jnp.sum((valid.reshape(ne, be) <= 0).astype(jnp.int32),
+                       axis=1)
+    eids = packed.entry_start[ins_w][:, None] + jnp.arange(M)   # [I, M]
+    emask = eids < packed.entry_start[ins_w + 1][:, None]
+    cnt = jnp.where(emask, free_cnt[jnp.clip(eids, 0, ne - 1)], 0)
+    cumc = jnp.cumsum(cnt, axis=1)                              # [I, M]
+    ok_window = keep & (rank < cumc[:, -1])
+    m_idx = jnp.argmax(cumc > rank[:, None], axis=1)
+    within = rank - jnp.where(m_idx > 0,
+                              jnp.take_along_axis(
+                                  cumc, jnp.maximum(m_idx - 1, 0)[:, None],
+                                  axis=1)[:, 0], 0)
+    entry = jnp.clip(eids[i, m_idx], 0, ne - 1)
+    rowfree = valid.reshape(ne, be)[entry] <= 0                 # [I, BE]
+    rowcum = jnp.cumsum(rowfree.astype(jnp.int32), axis=1)
+    lane_in = jnp.argmax(rowcum == (within + 1)[:, None], axis=1)
+    tgt = entry * be + lane_in
+
+    # overlay append (so later batches can locate these edges); overlay
+    # slots, like lanes, are a checked capacity
+    used = jnp.sum((packed.ovl_key != LANE_SENTINEL).astype(jnp.int32))
+    grank = jnp.cumsum((ok_window).astype(jnp.int32)) - 1
+    slot = jnp.where(ok_window, used + grank, K)
+    final_ok = ok_window & (slot < K)
+    slot = jnp.where(final_ok, slot, K)
+    ovl_key = packed.ovl_key.at[slot].set(ins_key, mode="drop")
+    ovl_lane = packed.ovl_lane.at[slot].set(tgt.astype(jnp.int32),
+                                            mode="drop")
+    dropped = (keep & ~ok_window) | (ok_window & ~final_ok)
+
+    tgt = jnp.where(final_ok, tgt, L)
+    src = src_flat.at[tgt].set(update.ins_src, mode="drop")
+    dst_rel = rel_flat.at[tgt].set(ins_rel, mode="drop")
+    valid = valid.at[tgt].set(1.0, mode="drop")
+    new = dataclasses.replace(packed, src=src.reshape(ne, be),
+                              dst_rel=dst_rel.reshape(ne, be),
+                              valid=valid.reshape(ne, be),
+                              ovl_key=ovl_key, ovl_lane=ovl_lane)
+    return new, jnp.sum(dropped.astype(jnp.int32))
+
+
+def apply_batch_packed(packed: PackedGraph, update: BatchUpdate, *,
+                       check: bool = True) -> PackedGraph:
+    """Pure device function Packedᵗ⁻¹, Δᵗ → Packedᵗ (shapes unchanged).
+
+    ``check=True`` syncs one scalar to raise on spill/overlay exhaustion
+    — skip it only when the caller audits overflow out of band.
+    """
+    new, dropped = _apply_batch_packed(packed, update)
+    if check:
+        n = int(dropped)
+        if n:
+            raise ValueError(
+                f"{n} insertions exceed spill capacity of their dst "
+                f"windows or the locator overlay; repack with pack_graph "
+                "/ raise spill_lanes_per_window or overlay_capacity "
+                "(capacity sizing: DESIGN.md §8)")
+    return new

@@ -26,7 +26,7 @@ import time
 import numpy as np
 
 import repro  # noqa: F401
-from repro.core.api import METHODS
+from repro.core.api import ENGINES, METHODS
 from repro.data.snap import PAPER_TABLE1, load_temporal
 from repro.graph.dynamic import apply_batch, make_batch_update
 from repro.launch.pagerank import _resolve_mesh
@@ -40,6 +40,11 @@ def main(argv=None):
     ap.add_argument("--dataset", default="sx-mathoverflow",
                     choices=list(PAPER_TABLE1))
     ap.add_argument("--method", default="frontier_prune", choices=METHODS)
+    ap.add_argument("--engine", default="xla", choices=list(ENGINES),
+                    help="rank-update engine: 'xla' (f64 segment_sum) or "
+                         "'kernel' (Pallas frontier-gated SpMV with "
+                         "device-side incremental PackedGraph maintenance "
+                         "and the f32→f64 hybrid-precision ladder)")
     ap.add_argument("--events", type=int, default=5000,
                     help="number of post-preload edge events to feed")
     ap.add_argument("--flush-size", type=int, default=64)
@@ -71,8 +76,8 @@ def main(argv=None):
     graph, events = preload_graph_and_feed(ds, args.events)
     print(f"dataset {ds.name}: |V|={ds.num_vertices:,} preload="
           f"{int(graph.num_valid_edges()):,} events={len(events):,} "
-          f"method={args.method} flush={args.flush_size}"
-          f"/{args.flush_interval_ms:g}ms")
+          f"method={args.method} engine={args.engine} "
+          f"flush={args.flush_size}/{args.flush_interval_ms:g}ms")
 
     metrics = ServeMetrics()
     store = RankStore(ckpt_dir=args.ckpt_dir or None,
@@ -105,6 +110,7 @@ def main(argv=None):
                if args.ppr_walks > 0 else None)
     engine = ServeEngine(graph, ingest, store, metrics=metrics,
                          method=args.method, mesh=mesh,
+                         engine=args.engine,
                          static_fallback_frac=args.static_fallback_frac,
                          ppr_index=ppr_cfg)
     if restored is not None:

@@ -19,6 +19,24 @@ anyway, so the decision adds no extra passes for frontier methods.
 ``mesh=`` routes the rank update through the distributed shard_map
 engine (repro.dist) — ingest/snapshot/query stay host-side either way.
 
+``engine="kernel"`` makes the Pallas frontier-gated SpMV the serving
+hot path (single pod): bootstrap packs the graph into the blocked
+``PackedGraph`` once, every micro-batch maintains it *on device* with
+``apply_batch_packed`` (no host repack), and dynamic-method solves run
+the hybrid-precision ladder (f32 kernel iterations + f64 polish,
+core.kernel_engine.hybrid_pagerank).  Published snapshots are unchanged
+— f64 ranks, same generation clock.  Static solves (bootstrap, fallback)
+stay on the XLA engine: with every window active the gated kernel has
+nothing to skip and the cold start wants f64 end-to-end.  If a window's
+spill lanes run out, the engine repacks from the current graph at the
+same capacity (``metrics.packed_rebuilds`` counts these) — the kernels
+never recompile because every shape is pinned at bootstrap.
+``kernel_opts`` tunes the path: pack sizing (``be``, ``vb``,
+``spill_lanes_per_window``, ``num_entries``), ``use_kernel`` (True =
+Pallas kernel [interpret mode off-TPU], False = jnp oracle, "auto" =
+kernel on TPU only) and any ``hybrid_pagerank`` kwarg (``tol_f32``,
+``polish``, ...).
+
 ``ppr_index=`` (an ``repro.ppr.IndexConfig`` or prebuilt ``WalkIndex``)
 opts the engine into maintaining a random-walk PPR index alongside the
 ranks: built at bootstrap, repaired inside every micro-batch step from
@@ -36,8 +54,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pagerank as pr
-from repro.core.api import LOOP_FLAGS, Method, build_initial_state, \
-    distributed_pagerank
+from repro.core.api import ENGINES, KERNEL_FLAGS, LOOP_FLAGS, Method, \
+    build_initial_state, distributed_pagerank
 from repro.graph.dynamic import apply_batch, touched_vertices_mask
 from repro.graph.structure import EdgeListGraph
 from repro.ppr import IndexConfig, WalkIndex, build_walk_index, \
@@ -48,18 +66,43 @@ from repro.serve.state import RankStore
 
 DYNAMIC_METHODS = ("naive", "traversal", "frontier", "frontier_prune")
 
+# serving pack defaults: smaller entries than the offline DEFAULT_BE=2048
+# keep the per-window spill reservation (and the padded-lane overhead the
+# contributions gather over) small relative to the live edges, while VB
+# stays 2×128 lanes (DESIGN.md §8 capacity model)
+KERNEL_PACK_DEFAULTS = dict(be=512, vb=256, spill_lanes_per_window=256)
+_PACK_KEYS = ("be", "vb", "spill_lanes_per_window", "num_entries",
+              "extra_entries", "overlay_capacity")
+
 
 class ServeEngine:
     def __init__(self, graph: EdgeListGraph, ingest: IngestQueue,
                  store: RankStore, metrics: Optional[ServeMetrics] = None,
                  method: Method = "frontier_prune", mesh=None,
+                 engine: str = "xla",
+                 kernel_opts: Optional[dict] = None,
                  static_fallback_frac: float = 0.25,
                  ppr_index=None, clock=time.monotonic, **pr_kw):
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; options {ENGINES}")
+        if engine == "kernel" and mesh is not None:
+            raise ValueError("engine='kernel' is the single-pod path; "
+                             "drop mesh= or use engine='xla'")
         self.ingest = ingest
         self.store = store
         self.metrics = metrics if metrics is not None else ServeMetrics()
         self.method = method
         self.mesh = mesh
+        self.engine = engine
+        opts = dict(kernel_opts or {})
+        self._pack_kw = {**KERNEL_PACK_DEFAULTS,
+                         **{k: opts.pop(k) for k in _PACK_KEYS
+                            if k in opts}}
+        use_kernel = opts.pop("use_kernel", "auto")
+        if use_kernel == "auto":
+            use_kernel = jax.default_backend() == "tpu"
+        self._kernel_kw = dict(use_kernel=bool(use_kernel), **opts)
+        self._packed = None
         self.static_fallback_frac = static_fallback_frac
         # opt-in walk index (repro.ppr): an IndexConfig to build at
         # bootstrap, or a prebuilt WalkIndex valid for `graph`
@@ -87,6 +130,33 @@ class ServeEngine:
         reproduces the index bit-identically from the replayed graph."""
         if ranks is None:
             ranks = self._solve("static", self._graph, None, None).ranks
+        if self.engine == "kernel" and self._packed is None:
+            from repro.kernels.pagerank_spmv.update import pack_graph
+            if "num_entries" not in self._pack_kw:
+                # mirror the edge list's stream headroom as empty tail
+                # entries, so an overflow repack at the pinned capacity
+                # can redistribute them to whichever windows grew
+                spare = (self._graph.edge_capacity
+                         - int(self._graph.num_valid_edges()))
+                self._pack_kw.setdefault(
+                    "extra_entries", -(-spare // self._pack_kw["be"]))
+            # ~64 micro-batches of insertions between locator repacks
+            self._pack_kw.setdefault(
+                "overlay_capacity", max(1024, 64 * self.ingest.capacity))
+            self._packed = pack_graph(self._graph, **self._pack_kw)
+            # pin every static: overflow repacks must not change any
+            # shape or static field, or the compiled update/kernel would
+            # retrace mid-recovery.  max_entries_per_window is pinned at
+            # the total entry capacity — the trivially safe bound, since
+            # a repack may redistribute entries to windows that grew (the
+            # free-slot scan it bounds is O(|Δ|·M), still tiny at M=NE)
+            cap = self._packed.num_entries
+            self._pack_kw["num_entries"] = cap
+            self._pack_kw["max_entries_per_window"] = cap
+            self._pack_kw.pop("extra_entries", None)
+            import dataclasses
+            self._packed = dataclasses.replace(
+                self._packed, max_entries_per_window=cap)
         if self._ppr_cfg is not None and self._ppr is None:
             self._ppr = build_walk_index(self._graph, self._ppr_cfg)
         self._ranks = ranks
@@ -104,6 +174,16 @@ class ServeEngine:
             return False
         t0 = self._clock()
         graph_new = apply_batch(self._graph, batch.update)
+        if self._packed is not None:
+            from repro.kernels.pagerank_spmv.update import \
+                apply_batch_packed
+            try:
+                self._packed = apply_batch_packed(self._packed, batch.update)
+            except ValueError:
+                # spill/overlay exhaustion: repack at the pinned shapes,
+                # which also defragments freed lanes back into window order
+                self._packed = self._repack(graph_new)
+                self.metrics.record_packed_rebuild()
         method = self.method
         init_state = build_initial_state(self._graph, graph_new,
                                          batch.update, self._ranks, method)
@@ -142,6 +222,23 @@ class ServeEngine:
             walks_resampled=resampled)
         return True
 
+    def _repack(self, graph: EdgeListGraph):
+        """Repack at the pinned shapes, degrading the spill guarantee.
+
+        Once windows have grown, the bootstrap ``spill_lanes_per_window``
+        may no longer fit the pinned ``num_entries``; serving must not
+        die on its own recovery path, so retry on the windows' natural
+        slack alone.  A failure beyond that is the genuine capacity
+        limit (the edge list itself is near overflow) and propagates.
+        """
+        from repro.kernels.pagerank_spmv.update import pack_graph
+        try:
+            return pack_graph(graph, **self._pack_kw)
+        except ValueError:
+            return pack_graph(graph,
+                              **{**self._pack_kw,
+                                 "spill_lanes_per_window": 0})
+
     def _solve(self, method: Method, graph_new: EdgeListGraph, update,
                prev_ranks, graph_prev: Optional[EdgeListGraph] = None,
                init_state: Optional[tuple] = None):
@@ -154,6 +251,11 @@ class ServeEngine:
         init_ranks, init_affected = (
             init_state if init_state is not None else build_initial_state(
                 graph_prev, graph_new, update, prev_ranks, method))
+        if self.engine == "kernel" and method in DYNAMIC_METHODS:
+            from repro.core.kernel_engine import hybrid_pagerank
+            return hybrid_pagerank(graph_new, self._packed, init_ranks,
+                                   init_affected, **KERNEL_FLAGS[method],
+                                   **self._kernel_kw, **self.pr_kw)
         return pr._pagerank_loop(graph_new, init_ranks, init_affected,
                                  **LOOP_FLAGS[method], **self.pr_kw)
 

@@ -40,6 +40,7 @@ class ServeMetrics:
         self.events_coalesced = 0
         self.static_fallbacks = 0
         self.walks_resampled = 0
+        self.packed_rebuilds = 0   # kernel engine spill-overflow repacks
         self._t_first_batch = None
         self._t_last_batch = None
         # queries
@@ -73,6 +74,9 @@ class ServeMetrics:
         if fallback:
             self.static_fallbacks += 1
 
+    def record_packed_rebuild(self):
+        self.packed_rebuilds += 1
+
     def record_query(self, staleness_events: int):
         self.queries_served += 1
         self.query_staleness.append(int(staleness_events))
@@ -100,6 +104,7 @@ class ServeMetrics:
                              if self.batch_iterations else 0.0),
             static_fallbacks=self.static_fallbacks,
             walks_resampled=self.walks_resampled,
+            packed_rebuilds=self.packed_rebuilds,
             admission_accepted=self.accepted,
             admission_rejected=self.rejected,
         )

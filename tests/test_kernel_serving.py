@@ -1,0 +1,293 @@
+"""Kernel serving path: incremental PackedGraph maintenance, streaming
+parity vs rebuild + f64 engine, single-compilation contract, spill
+exhaustion, hybrid precision, work counters, ServeEngine integration."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.core import pagerank as pr
+from repro.core.api import update_pagerank
+from repro.core.kernel_engine import (TRACE_COUNTS as LOOP_TRACES,
+                                      hybrid_pagerank, kernel_pagerank_loop)
+from repro.graph.dynamic import (apply_batch, make_batch_update,
+                                 touched_vertices_mask)
+from repro.graph.generators import erdos_renyi_edges, rmat_edges
+from repro.graph.structure import from_coo
+from repro.kernels.pagerank_spmv.pagerank_spmv import pack_blocks
+from repro.kernels.pagerank_spmv.update import (TRACE_COUNTS as UPD_TRACES,
+                                                apply_batch_packed,
+                                                pack_graph, packed_edge_set)
+from repro.serve import IngestQueue, RankStore, ServeEngine, ServeMetrics
+
+N = 48
+
+
+def _graph_edge_set(g):
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    valid = np.asarray(g.valid)
+    return set(zip(src[valid].tolist(), dst[valid].tolist()))
+
+
+def _random_update(rng, live, n_del=4, n_ins=6):
+    """Interleaved deletions (live + absent) and insertions (+dup)."""
+    dels = []
+    if len(live) and n_del:
+        picks = rng.choice(len(live), size=min(n_del, len(live)),
+                           replace=False)
+        dels.extend(map(tuple, live[picks].tolist()))
+    e = rng.integers(0, N, size=(2, 2))
+    dels.extend(map(tuple, e[e[:, 0] != e[:, 1]].tolist()))  # absent: no-op
+    e = rng.integers(0, N, size=(n_ins, 2))
+    ins = list(map(tuple, e[e[:, 0] != e[:, 1]].tolist()))
+    if ins:
+        ins.append(ins[0])                                   # in-batch dup
+    if dels:
+        ins.append(dels[0])                                  # delete→reinsert
+    return (np.asarray(dels, np.int32).reshape(-1, 2),
+            np.asarray(ins, np.int32).reshape(-1, 2))
+
+
+# ---------------------------------------------------------------------------
+# streaming parity: N micro-batches == fresh rebuild (set) == f64 ranks
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_streaming_packed_parity(seed):
+    rng = np.random.default_rng(seed)
+    init = np.unique(rng.integers(0, N, size=(120, 2)), axis=0)
+    init = init[init[:, 0] != init[:, 1]]
+    g = from_coo(init[:, 0], init[:, 1], N, edge_capacity=len(init) + 128)
+    packed = pack_graph(g, be=32, vb=16, spill_lanes_per_window=32)
+    ranks = pr.static_pagerank(g).ranks
+    ranks_xla = ranks
+
+    for step in range(8):
+        live = np.asarray(sorted(_graph_edge_set(g)), np.int32).reshape(-1, 2)
+        dels, ins = _random_update(rng, live)
+        upd = make_batch_update(dels, ins, 8, 16)
+        g_new = apply_batch(g, upd)
+        packed = apply_batch_packed(packed, upd)
+
+        # (a) bitwise parity with a fresh pack_blocks rebuild on the
+        # packed structure's live-edge *set*
+        rebuilt = pack_graph(g_new, be=32, vb=16)
+        assert packed_edge_set(packed) == packed_edge_set(rebuilt), step
+        assert packed_edge_set(packed) == _graph_edge_set(g_new), step
+
+        # (b) kernel-engine ranks track the f64 XLA engine
+        touched = touched_vertices_mask(upd, N)
+        aff = pr.initial_affected(g, g_new, touched)
+        hyb = hybrid_pagerank(g_new, packed, ranks, aff, closed_form=True,
+                              prune=True, expand=True, use_kernel=False)
+        xla = update_pagerank(g, g_new, upd, ranks_xla, "frontier_prune")
+        l1 = float(jnp.sum(jnp.abs(hyb.ranks - xla.ranks)))
+        assert l1 <= 1e-6, (step, l1)
+        g, ranks, ranks_xla = g_new, hyb.ranks, xla.ranks
+
+
+# ---------------------------------------------------------------------------
+# one compiled update + one compiled kernel loop for a 100-batch stream
+# ---------------------------------------------------------------------------
+
+def test_hundred_batch_stream_compiles_once():
+    rng = np.random.default_rng(7)
+    init = np.unique(rng.integers(0, N, size=(100, 2)), axis=0)
+    init = init[init[:, 0] != init[:, 1]]
+    g = from_coo(init[:, 0], init[:, 1], N, edge_capacity=len(init) + 256)
+    packed = pack_graph(g, be=32, vb=16, spill_lanes_per_window=64)
+    ranks = pr.static_pagerank(g).ranks.astype(jnp.float32)
+    aff0 = jnp.zeros((N,), bool).at[0].set(True)
+
+    def one_batch(seed):
+        nonlocal g, packed, ranks
+        dels, ins = _random_update(np.random.default_rng(seed),
+                                   np.asarray(sorted(_graph_edge_set(g)),
+                                              np.int32).reshape(-1, 2),
+                                   n_del=2, n_ins=3)
+        upd = make_batch_update(dels, ins, 8, 8)
+        g = apply_batch(g, upd)
+        packed = apply_batch_packed(packed, upd)
+        touched = touched_vertices_mask(upd, N)
+        res = kernel_pagerank_loop(g, packed, ranks, aff0 | touched,
+                                   use_kernel=False)
+        ranks = res.ranks
+
+    one_batch(0)                                     # batch 1 compiles
+    upd_traces = dict(UPD_TRACES)
+    loop_traces = dict(LOOP_TRACES)
+    for i in range(1, 100):                          # batches 2..100 reuse
+        one_batch(i)
+    assert dict(UPD_TRACES) == upd_traces, "apply_batch_packed retraced"
+    assert dict(LOOP_TRACES) == loop_traces, "kernel loop retraced"
+
+
+# ---------------------------------------------------------------------------
+# capacity error paths
+# ---------------------------------------------------------------------------
+
+def test_pack_blocks_capacity_error_message():
+    edges = np.asarray([[0, 1], [2, 1], [3, 1], [4, 1]], np.int32)
+    with pytest.raises(ValueError, match="entries exceed capacity"):
+        pack_blocks(edges[:, 0], edges[:, 1], np.ones(4, bool), 8,
+                    be=2, vb=8, num_entries=1)
+
+
+def test_spill_exhaustion_checked_error():
+    g = from_coo(np.array([0]), np.array([1]), 64, edge_capacity=64)
+    packed = pack_graph(g, be=8, vb=64, spill_lanes_per_window=0)
+    ins = np.asarray([[i, 1] for i in range(2, 14)], np.int32)
+    upd = make_batch_update(np.zeros((0, 2), np.int32), ins, 8, 16)
+    with pytest.raises(ValueError, match="exceed spill capacity"):
+        apply_batch_packed(packed, upd)
+    # check=False keeps going (drops the overflow) for out-of-band audit
+    out = apply_batch_packed(packed, upd, check=False)
+    assert len(packed_edge_set(out)) == 8   # 1 live + 7 free lanes claimed
+
+
+# ---------------------------------------------------------------------------
+# engine="kernel" API + precision ladder
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["frontier", "frontier_prune"])
+def test_update_pagerank_kernel_engine_matches_xla(method):
+    edges, n = rmat_edges(8, 8, seed=3)
+    g = from_coo(edges[:, 0], edges[:, 1], n, edge_capacity=len(edges) * 2)
+    r0 = pr.static_pagerank(g).ranks
+    from repro.graph.generators import random_batch_update
+    dele, ins = random_batch_update(edges, n, 16, seed=4)
+    upd = make_batch_update(dele, ins, 32, 32)
+    g2 = apply_batch(g, upd)
+    xla = update_pagerank(g, g2, upd, r0, method)
+    ker = update_pagerank(g, g2, upd, r0, method, engine="kernel",
+                          use_kernel=False)
+    linf = float(jnp.max(jnp.abs(xla.ranks - ker.ranks)))
+    assert linf <= 1e-6
+    assert ker.ranks.dtype == jnp.float64
+    assert int(ker.edges_processed) > 0
+    assert int(ker.vertices_processed) > 0
+
+
+def test_kernel_engine_rejects_mesh():
+    edges, n = erdos_renyi_edges(32, 64, seed=0)
+    g = from_coo(edges[:, 0], edges[:, 1], n)
+    with pytest.raises(ValueError, match="single-pod"):
+        update_pagerank(g, g, None, None, "static", mesh=object(),
+                        engine="kernel")
+
+
+def test_hybrid_no_polish_is_f32_precision():
+    edges, n = erdos_renyi_edges(64, 400, seed=1)
+    g = from_coo(edges[:, 0], edges[:, 1], n, edge_capacity=len(edges) + 32)
+    packed = pack_graph(g, be=64, vb=32)
+    r0 = jnp.full((n,), 1.0 / n, jnp.float64)
+    res = hybrid_pagerank(g, packed, r0, jnp.ones((n,), bool),
+                          expand=False, polish=False, use_kernel=False)
+    assert res.ranks.dtype == jnp.float64   # result contract holds
+    ref = pr.static_pagerank(g)
+    assert float(jnp.max(jnp.abs(res.ranks - ref.ranks))) < 1e-5  # f32-level
+
+
+# ---------------------------------------------------------------------------
+# work counters: gated runs skip work, full runs count everything
+# ---------------------------------------------------------------------------
+
+def test_kernel_loop_work_counters_window_granular():
+    edges, n = rmat_edges(8, 8, seed=9)
+    g = from_coo(edges[:, 0], edges[:, 1], n, edge_capacity=len(edges) + 16)
+    packed = pack_graph(g, be=128, vb=64)
+    E = int(g.num_valid_edges())
+    r0 = jnp.full((n,), 1.0 / n, jnp.float32)
+    full = kernel_pagerank_loop(g, packed, r0, jnp.ones((n,), bool),
+                                expand=False, use_kernel=False)
+    assert int(full.edges_processed) == E * int(full.iterations)
+    assert int(full.vertices_processed) == \
+        packed.num_windows * packed.vb * int(full.iterations)
+    # localized frontier: strictly less work than full sweeps
+    warm = pr.static_pagerank(g).ranks
+    aff = jnp.zeros((n,), bool).at[0].set(True)
+    gated = kernel_pagerank_loop(g, packed, warm, aff, use_kernel=False)
+    assert int(gated.edges_processed) < E * max(1, int(gated.iterations))
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine integration: kernel engine serves the same ranks
+# ---------------------------------------------------------------------------
+
+def _serve(engine_name, feed, kernel_opts=None):
+    edges, n = erdos_renyi_edges(N, 300, seed=2)
+    graph = from_coo(edges[:, 0], edges[:, 1], n,
+                     edge_capacity=len(edges) + 256)
+    ingest = IngestQueue(flush_size=16, flush_interval=0.0)
+    store = RankStore()
+    metrics = ServeMetrics()
+    eng = ServeEngine(graph, ingest, store, metrics=metrics,
+                      method="frontier_prune", engine=engine_name,
+                      kernel_opts=kernel_opts,
+                      static_fallback_frac=1.0)
+    eng.bootstrap()
+    for u, v, kind in feed:
+        if kind == "i":
+            ingest.submit_insert(u, v)
+        else:
+            ingest.submit_delete(u, v)
+        eng.step()
+    eng.drain()
+    return store.snapshot(), metrics
+
+
+def _feed(seed, k=120):
+    rng = np.random.default_rng(seed)
+    feed = []
+    for _ in range(k):
+        u, v = rng.integers(0, N, size=2)
+        if u == v:
+            continue
+        feed.append((int(u), int(v), "i" if rng.random() < 0.8 else "d"))
+    return feed
+
+
+def test_serve_engine_kernel_matches_xla():
+    feed = _feed(11)
+    snap_x, _ = _serve("xla", feed)
+    snap_k, m = _serve("kernel", feed,
+                       kernel_opts=dict(use_kernel=False, be=32, vb=16,
+                                        spill_lanes_per_window=64))
+    assert snap_k.generation == snap_x.generation
+    linf = float(jnp.max(jnp.abs(snap_k.ranks - snap_x.ranks)))
+    assert linf <= 1e-6, linf
+    assert m.packed_rebuilds == 0
+
+
+def test_serve_engine_kernel_rebuild_fallback():
+    # little spill headroom + skewed growth (inserts pile into the last
+    # window while deletes spread elsewhere): windows overflow, the
+    # engine repacks at the pinned shapes — degrading the spill
+    # guarantee if the regrown windows no longer fit it — and keeps
+    # serving correct ranks with zero recompilation
+    rng = np.random.default_rng(13)
+    feed = []
+    for _ in range(160):
+        if rng.random() < 0.75:
+            u, v = int(rng.integers(0, N)), int(rng.integers(32, N))
+        else:
+            u, v = int(rng.integers(0, N)), int(rng.integers(0, 32))
+        if u != v:
+            feed.append((u, v, "i" if rng.random() < 0.85 else "d"))
+    snap_x, _ = _serve("xla", feed)
+    from repro.core.kernel_engine import TRACE_COUNTS as LOOP_T
+    from repro.kernels.pagerank_spmv.update import TRACE_COUNTS as UPD_T
+    before = (dict(UPD_T), dict(LOOP_T))
+    snap_k, m = _serve("kernel", feed,
+                       kernel_opts=dict(use_kernel=False, be=8, vb=16,
+                                        spill_lanes_per_window=8))
+    after = (dict(UPD_T), dict(LOOP_T))
+    assert m.packed_rebuilds >= 1
+    linf = float(jnp.max(jnp.abs(snap_k.ranks - snap_x.ranks)))
+    assert linf <= 1e-6, linf
+    # pinned shapes/statics: at most the one initial trace per function,
+    # rebuilds must not retrace
+    for counts_b, counts_a in zip(before, after):
+        for k, v in counts_a.items():
+            assert v - counts_b.get(k, 0) <= 1, (k, counts_b, counts_a)
