@@ -6,13 +6,12 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
-from repro.graph.generators import rmat_edges
+from benchmarks.common import cached_rmat, emit, time_fn
 from repro.kernels.pagerank_spmv.ops import gated_contrib, pack_blocks
 
 
 def run():
-    edges, n = rmat_edges(10, 10, seed=7)
+    edges, n = cached_rmat(10, 10, seed=7)
     packed = pack_blocks(edges[:, 0], edges[:, 1],
                          np.ones(len(edges), bool), n, be=512, vb=256)
     rng = np.random.default_rng(0)
@@ -51,7 +50,7 @@ def run():
     from repro.graph.structure import from_coo as _from_coo
     from repro.kernels.pagerank_spmv.update import apply_batch_packed, \
         pack_graph
-    edges_u, n_u = rmat_edges(14, 8, seed=3)
+    edges_u, n_u = cached_rmat(14, 8, seed=3)
     gg = _from_coo(edges_u[:, 0], edges_u[:, 1], n_u,
                    edge_capacity=len(edges_u) + 4096)
     pk = pack_graph(gg, be=512, vb=256, spill_lanes_per_window=256)

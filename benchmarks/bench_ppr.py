@@ -31,7 +31,8 @@ from benchmarks.common import emit
 from repro.core.extensions import personalized_pagerank
 from repro.graph.dynamic import apply_batch, make_batch_update, \
     touched_vertices_mask
-from repro.graph.generators import random_batch_update, rmat_edges
+from benchmarks.common import cached_rmat
+from repro.graph.generators import random_batch_update
 from repro.graph.structure import from_coo
 from repro.ppr import (DEFAULT_MIN_EFFECTIVE_WALKS, IndexConfig,
                        build_walk_index, ppr_top_k, precision_at_k,
@@ -52,7 +53,7 @@ def _timed(fn, repeats=3):
 
 def run(scale=17, edge_factor=8, num_walks=64, max_len=16, num_queries=4,
         batch_size=256, topk=10, seed=0):
-    edges, n = rmat_edges(scale, edge_factor, seed=1)
+    edges, n = cached_rmat(scale, edge_factor, seed=1)
     graph = from_coo(edges[:, 0], edges[:, 1], n,
                      edge_capacity=int(len(edges) * 1.2))
     cfg = IndexConfig(num_walks=num_walks, max_len=max_len, seed=seed)

@@ -8,13 +8,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (emit, geomean, reference_ranks, time_fn)
+from benchmarks.common import (cached_rmat, emit, geomean,
+                               reference_ranks, time_fn)
 from repro.core.api import update_pagerank
 from repro.core.reference import l1_error
 from repro.graph.dynamic import apply_batch, make_batch_update
 from repro.graph.generators import (barabasi_albert_edges, erdos_renyi_edges,
-                                    grid_edges, random_batch_update,
-                                    rmat_edges)
+                                    grid_edges, random_batch_update)
 from repro.graph.structure import from_coo
 
 METHODS = ("static", "naive", "traversal", "frontier", "frontier_prune")
@@ -24,7 +24,7 @@ def graphs():
     # sized so edge work dominates dispatch (≥100k edges each);
     # grid = the high-diameter road-network class where the paper sees
     # its biggest frontier wins
-    e1, n1 = rmat_edges(14, 12, seed=3)       # web-like power law
+    e1, n1 = cached_rmat(14, 12, seed=3)       # web-like power law
     e2, n2 = barabasi_albert_edges(15_000, 8, seed=4)     # social
     e3, n3 = grid_edges(260)                  # road-like lattice
     return [("web_rmat", e1, n1), ("social_ba", e2, n2),

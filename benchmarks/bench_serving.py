@@ -11,18 +11,22 @@ burst every ``query_every`` events.  Emitted rows:
                                 query staleness (events), mean
                                 |affected|, static fallbacks
 
-The 131k-vertex RMAT section compares the XLA f64 engine against the
-kernel engine (incremental PackedGraph maintenance + hybrid-precision
-ladder) on the same stream, emits the events/s delta per method, and
-times one incremental ``apply_batch_packed`` against a full host
-``pack_blocks`` rebuild — all registered in ``run.py --json``.
+The 131k-vertex RMAT section (graph via the seeded ``common`` cache,
+built once for the whole suite) compares the XLA f64 engine, the kernel
+engine (incremental PackedGraph maintenance + hybrid-precision ladder)
+and the **sharded** kernel engine (window-range shards + routed deltas
+over a ``model`` mesh spanning every visible device — force more with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``) on the same
+stream, emits the events/s deltas per method, and times one incremental
+``apply_batch_packed`` against a full host ``pack_blocks`` rebuild —
+all registered in ``run.py --json``.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, time_fn
-from repro.data.snap import TemporalDataset, load_temporal
+from benchmarks.common import emit, rmat_dataset, time_fn
+from repro.data.snap import load_temporal
 from repro.serve import IngestQueue, QueryClient, RankStore, ServeEngine, \
     ServeMetrics, preload_graph_and_feed
 
@@ -30,20 +34,15 @@ METHODS = ("traversal", "frontier", "frontier_prune")
 RMAT_METHODS = ("frontier", "frontier_prune")
 
 
-def _rmat_dataset(scale=17, edge_factor=4, seed=7) -> TemporalDataset:
-    """131k-vertex (scale 17) R-MAT power-law digraph as an arrival-order
-    event stream (deduplicated, shuffled)."""
-    from repro.graph.generators import rmat_edges
-    edges, n = rmat_edges(scale, edge_factor, seed=seed)
-    edges = np.unique(edges, axis=0)
-    edges = edges[edges[:, 0] != edges[:, 1]]
-    rng = np.random.default_rng(seed)
-    edges = edges[rng.permutation(len(edges))]
-    return TemporalDataset(f"rmat{n}", edges.astype(np.int32), n, True)
+def _mesh():
+    import jax
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()), ("model",))
 
 
 def _serve_once(ds, events, method, flush_size=64, query_every=100,
-                topk=10, seed=0, engine="xla", kernel_opts=None):
+                topk=10, seed=0, engine="xla", kernel_opts=None,
+                mesh=None):
     import time
 
     graph, feed = preload_graph_and_feed(ds, events)
@@ -53,7 +52,8 @@ def _serve_once(ds, events, method, flush_size=64, query_every=100,
                          max_pending=max(events, 8 * flush_size))
     store = RankStore()
     engine = ServeEngine(graph, ingest, store, method=method,
-                         engine=engine, kernel_opts=kernel_opts)
+                         engine=engine, kernel_opts=kernel_opts,
+                         mesh=mesh)
     engine.bootstrap()
     rng = np.random.default_rng(seed)
     # warm the compiled step so the timed run measures steady state
@@ -92,21 +92,29 @@ def run(dataset="sx-mathoverflow", events=600, flush_size=64,
              f"affected={m['affected_mean']:.0f};"
              f"fallbacks={m['static_fallbacks']}")
 
-    # ---- kernel engine vs XLA engine, 131k-vertex RMAT stream ----------
-    rmat = _rmat_dataset()
+    # ---- xla vs kernel vs sharded-kernel, 131k-vertex RMAT stream ------
+    rmat = rmat_dataset()
+    mesh = _mesh()
+    shards = int(mesh.shape["model"])
     for method in RMAT_METHODS:
         rate = {}
-        for eng in ("xla", "kernel"):
+        for eng, m_arg in (("xla", None), ("kernel", None),
+                           ("sharded_kernel", mesh)):
             wall, n, m = _serve_once(rmat, rmat_events, method, flush_size,
-                                     query_every, engine=eng)
+                                     query_every, engine=eng.split("_")[-1],
+                                     mesh=m_arg)
             rate[eng] = n / wall
+            extra = f";shards={shards}" if m_arg is not None else ""
             emit(f"serving/{rmat.name}/{method}/{eng}", wall / max(1, n),
                  f"events_per_s={rate[eng]:.1f};"
                  f"p99_update_ms={m['update_latency_p99_ms']:.1f};"
                  f"affected={m['affected_mean']:.0f};"
-                 f"rebuilds={m['packed_rebuilds']}")
+                 f"rebuilds={m['packed_rebuilds']}{extra}")
         emit(f"serving/{rmat.name}/{method}/kernel_vs_xla", 0.0,
              f"events_per_s_ratio={rate['kernel'] / rate['xla']:.2f}")
+        emit(f"serving/{rmat.name}/{method}/sharded_kernel_vs_xla", 0.0,
+             f"events_per_s_ratio="
+             f"{rate['sharded_kernel'] / rate['xla']:.2f};shards={shards}")
 
     # ---- incremental PackedGraph update vs full host repack ------------
     from repro.graph.dynamic import make_batch_update

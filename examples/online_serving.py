@@ -11,6 +11,12 @@ published snapshot.
 device-side incremental PackedGraph maintenance; off-TPU the kernel runs
 in interpret mode (``use_kernel=True`` below forces it even on CPU so CI
 smoke-tests the real kernel body, not the jnp oracle).
+
+``--mesh N`` (with ``--engine kernel``) shards the packed structure by
+dst-window ranges over an N-way ``model`` mesh — the multi-device smoke
+lane runs ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` with
+``--mesh 4``.  Off-TPU the sharded loop gates on the jnp oracle
+(interpret-mode Pallas is not SPMD-safe under shard_map; DESIGN.md §9).
 """
 import argparse
 import time
@@ -25,7 +31,21 @@ from repro.serve import (IngestQueue, QueryClient, RankStore, ServeEngine,
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--engine", default="xla", choices=["xla", "kernel"])
+ap.add_argument("--mesh", type=int, default=0,
+                help="shard the kernel engine over an N-way model mesh "
+                     "(0 = single device); requires N visible devices")
 args = ap.parse_args()
+
+mesh = None
+if args.mesh > 0:
+    import jax
+    from jax.sharding import Mesh
+    if len(jax.devices()) < args.mesh:
+        raise SystemExit(
+            f"--mesh {args.mesh} needs {args.mesh} devices, have "
+            f"{len(jax.devices())}; on CPU force them with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={args.mesh}")
+    mesh = Mesh(np.array(jax.devices()[: args.mesh]), ("model",))
 
 edges, n = rmat_edges(11, 8, seed=42)
 graph = from_coo(edges[:, 0], edges[:, 1], n,
@@ -35,7 +55,7 @@ metrics = ServeMetrics()
 ingest = IngestQueue(flush_size=64, flush_interval=0.02, max_pending=4096)
 store = RankStore()
 engine = ServeEngine(graph, ingest, store, metrics=metrics,
-                     method="frontier_prune", engine=args.engine,
+                     method="frontier_prune", engine=args.engine, mesh=mesh,
                      kernel_opts=dict(use_kernel=True, be=256, vb=256))
 engine.bootstrap()
 client = QueryClient(store, ingest, metrics)

@@ -133,21 +133,41 @@ def update_pagerank(graph_prev: EdgeListGraph,
     shard_map distributed engine (repro.dist.pagerank_dist) instead of the
     single-device loop.
 
-    ``engine="kernel"``: single-pod Pallas hot path — hybrid-precision
-    f32 frontier-gated SpMV iterations + f64 polish (core.kernel_engine),
+    ``engine="kernel"``: Pallas hot path — hybrid-precision f32
+    frontier-gated SpMV iterations + f64 polish (core.kernel_engine),
     same ``PageRankResult`` contract.  ``packed`` supplies the blocked
     structure for streaming callers that maintain it incrementally
     (``kernels.pagerank_spmv.update.apply_batch_packed``); when omitted a
     one-shot ``pack_graph`` bootstrap is done here.
+
+    ``engine="kernel"`` + ``mesh``: the sharded kernel path — the
+    PackedGraph is partitioned by dst-window ranges over the mesh's
+    ``model`` axis and the hybrid ladder runs under shard_map
+    (dist.pagerank_dist.sharded_kernel_pagerank).  One-shot calls pack
+    per call; streaming callers hold a ``ShardedKernelEngine`` (the
+    serve engine does) so pack + compile happen once per stream.
     """
-    if mesh is not None:
-        if engine == "kernel":
-            raise ValueError("engine='kernel' is the single-pod path; "
-                             "drop mesh= or use engine='xla'")
-        return distributed_pagerank(graph_prev, graph_new, update,
-                                    prev_ranks, method, mesh, **kw)
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; options {ENGINES}")
+    if mesh is not None:
+        if engine == "kernel":
+            from repro.dist.pagerank_dist import sharded_kernel_pagerank
+            if packed is not None:
+                # a single-pod PackedGraph cannot seed the sharded path;
+                # silently repacking would hide that the caller's
+                # incrementally-maintained structure is being discarded
+                raise ValueError(
+                    "packed= is the single-pod structure; the sharded "
+                    "path takes sharded=/spec= (streaming callers hold "
+                    "a dist.ShardedKernelEngine, as the serve engine "
+                    "does)")
+            init_ranks, init_affected = build_initial_state(
+                graph_prev, graph_new, update, prev_ranks, method)
+            return sharded_kernel_pagerank(graph_new, init_ranks,
+                                           init_affected, mesh,
+                                           **KERNEL_FLAGS[method], **kw)
+        return distributed_pagerank(graph_prev, graph_new, update,
+                                    prev_ranks, method, mesh, **kw)
     init_ranks, init_affected = build_initial_state(
         graph_prev, graph_new, update, prev_ranks, method)
     if engine == "kernel":

@@ -1,7 +1,9 @@
 """repro.dist — the multi-device layer (DESIGN.md §4).
 
 Modules:
-  * ``pagerank_dist``  — shard_map DF/DF-P PageRank over the 2-D/3-D mesh;
+  * ``pagerank_dist``  — shard_map DF/DF-P PageRank over the 2-D/3-D mesh
+    (XLA engine) plus the window-range-sharded kernel engine
+    (``ShardedKernelEngine`` / ``sharded_kernel_pagerank``, DESIGN.md §9);
   * ``collectives``    — low-precision collective primitives (int8_psum);
   * ``constraints``    — logical sharding hints for the model zoo;
   * ``sharding``       — NamedSharding trees per arch family (dry-run).

@@ -1,9 +1,26 @@
 """shard_map DF/DF-P PageRank over the 2-D/3-D production mesh.
 
+Two engines live here:
+
+  * the **XLA engine** (``build_distributed_step`` /
+    ``DistributedEngine``): f64 segment_sum contributions over
+    model-sharded vertex ranges and data-striped edges — the original
+    distributed path, described below;
+  * the **kernel engine** (``sharded_kernel_pagerank`` /
+    ``ShardedKernelEngine``): the Pallas frontier-gated SpMV over a
+    window-range-sharded ``PackedGraph`` (kernels.pagerank_spmv.shard),
+    f32 iterations with a replicated rank vector maintained by one
+    ``psum`` of shard-local contributions per iteration, then the same
+    f32→f64 hybrid polish as the single-pod kernel engine
+    (core.kernel_engine) over the union of shard affected_ever masks.
+    This makes the fast path and the scale path the same path
+    (DESIGN.md §9).
+
 Layout (DESIGN.md §4, graph/partition.py): the ``model`` axis owns
 contiguous dst ranges — vertex state (ranks, inv out-degree, frontier
 mask) lives model-sharded, replicated across the data axes; the ``data``
-(+``pod``) axes stripe the edges *within* each dst range.
+(+``pod``) axes stripe the edges *within* each dst range.  The kernel
+engine reuses the same dst-range ownership at window granularity.
 
 One iteration on a device (m, p):
   1. all_gather across ``model`` of the rank/degree product PACKED with
@@ -32,6 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import shard_map
+from repro.core import pagerank as pr
 from repro.core.pagerank import (ALPHA, FRONTIER_TOL, MAX_ITER, PRUNE_TOL,
                                  TOL)
 from repro.dist.collectives import bool_or_psum
@@ -266,3 +284,266 @@ class DistributedEngine:
         r, it, delta, ever, edges, verts = self._fn(*args)
         return (r[: self.n_vertices], it, delta,
                 ever[: self.n_vertices], edges, verts)
+
+
+# ---------------------------------------------------------------------------
+# kernel engine on the mesh: window-range-sharded frontier-gated SpMV
+# ---------------------------------------------------------------------------
+
+# compiled sharded kernel loops, keyed by (mesh, spec, solver statics);
+# FIFO-bounded like the XLA engine cache
+_SHARDED_LOOPS: dict = {}
+_SHARDED_LOOPS_MAX = 8
+
+
+def _get_sharded_loop(mesh, spec, *, alpha: float, tol: float,
+                      frontier_tol: float, prune_tol: float, max_iter: int,
+                      closed_form: bool, prune: bool, expand: bool,
+                      use_kernel: bool):
+    """One compiled shard_map'd f32 kernel loop per (mesh, spec, flags).
+
+    Mirrors ``core.kernel_engine.kernel_pagerank_loop`` with two
+    distributed moves per iteration: the shard-local gated SpMV over the
+    shard's windows, and one ``psum`` over ``model`` that reassembles the
+    full contribution vector (per-shard supports are disjoint — shard s
+    owns all in-edges of its dst windows — so the sum is exact, not an
+    approximation).  Rank state, frontier masks and expansion
+    (``graph.push_or``) stay replicated: every device runs the identical
+    O(V)/O(E) mask math, only the O(active edges) SpMV is sharded.
+    """
+    from repro.kernels.pagerank_spmv import shard as _sh
+
+    key = (mesh, spec, alpha, tol, frontier_tol, prune_tol, max_iter,
+           closed_form, prune, expand, use_kernel)
+    fn = _SHARDED_LOOPS.get(key)
+    if fn is not None:
+        return fn
+    S, wps, vb = spec.num_shards, spec.windows_per_shard, spec.vb
+    vps = spec.vertices_per_shard
+    v_pad = spec.padded_vertices
+    V = spec.num_vertices
+
+    def step(sharded, graph, ranks_pad, inv_deg_pad, affected):
+        _sh.TRACE_COUNTS["sharded_kernel_loop"] += 1   # trace-time only
+        packed = _sh._local_packed(sharded, spec, index=0)
+        idx = jax.lax.axis_index("model")
+        entry_edges = jnp.sum((packed.valid > 0), axis=1).astype(jnp.int64)
+        c0 = jnp.float32((1.0 - alpha) / V)
+        a32 = jnp.float32(alpha)
+
+        def body(state):
+            r_pad, aff, ever, _, it, edges, verts = state
+            aff_pad = jnp.pad(aff, (0, v_pad - V))
+            active = jnp.any(aff_pad.reshape(S * wps, vb), axis=1)
+            active_l = jax.lax.dynamic_slice(active, (idx * wps,), (wps,))
+            rsc = r_pad * inv_deg_pad
+            contrib_l = _sh.gated_contrib_shard(packed, rsc, active_l,
+                                                use_kernel=use_kernel)
+            contrib = jax.lax.psum(
+                jax.lax.dynamic_update_slice(
+                    jnp.zeros((v_pad,), jnp.float32), contrib_l,
+                    (idx * vps,)), "model")
+            if closed_form:
+                r_new_all = (c0 + a32 * contrib) / (1.0 - a32 * inv_deg_pad)
+            else:
+                r_new_all = c0 + a32 * (contrib + r_pad * inv_deg_pad)
+            r_new = jnp.where(aff_pad, r_new_all, r_pad)
+            dr = jnp.abs(r_new - r_pad)[:V]
+            rel = dr / jnp.maximum(jnp.maximum(r_new[:V], r_pad[:V]), 1e-30)
+            delta = jnp.max(jnp.where(aff, dr, 0.0))
+            new_aff = aff
+            if prune:
+                new_aff = new_aff & ~(aff & (rel <= prune_tol))
+            if expand:
+                big = aff & (rel > frontier_tol)
+                new_aff = new_aff | graph.push_or(big) | big
+            edges = edges + jax.lax.psum(jnp.sum(
+                jnp.where(active_l[packed.window], entry_edges, 0)),
+                "model")
+            verts = verts + jax.lax.psum(
+                jnp.sum(active_l.astype(jnp.int64)) * vb, "model")
+            return (r_new, new_aff, ever | new_aff, delta, it + 1,
+                    edges, verts)
+
+        def cond(state):
+            return (state[3] > tol) & (state[4] < max_iter)
+
+        state0 = (ranks_pad, affected, affected,
+                  jnp.asarray(jnp.inf, jnp.float32),
+                  jnp.asarray(0, jnp.int32),
+                  jnp.asarray(0, jnp.int64), jnp.asarray(0, jnp.int64))
+        r_out, _, ever, delta, it, edges, verts = jax.lax.while_loop(
+            cond, body, state0)
+        return r_out, it, delta, ever, edges, verts
+
+    fn = jax.jit(shard_map(
+        step, mesh=mesh,
+        in_specs=(P("model"), P(), P(), P(), P()),
+        out_specs=(P(), P(), P(), P(), P(), P()), check_vma=False))
+    while len(_SHARDED_LOOPS) >= _SHARDED_LOOPS_MAX:
+        _SHARDED_LOOPS.pop(next(iter(_SHARDED_LOOPS)))
+    _SHARDED_LOOPS[key] = fn
+    return fn
+
+
+def sharded_hybrid_pagerank(mesh, sharded, spec, graph, init_ranks,
+                            init_affected, *, alpha: float = ALPHA,
+                            tol: float = TOL, tol_f32: float = 1e-7,
+                            frontier_tol: float = FRONTIER_TOL,
+                            prune_tol: float = PRUNE_TOL,
+                            kernel_frontier_tol: float = 1e-5,
+                            kernel_prune_tol: float = 1e-5,
+                            max_iter: int = MAX_ITER,
+                            closed_form: bool = False, prune: bool = False,
+                            expand: bool = True, polish: bool = True,
+                            use_kernel: bool = False) -> pr.PageRankResult:
+    """The sharded precision ladder: f32 kernel iterations on the mesh to
+    ``tol_f32``, then the f64 XLA polish on the default device seeded
+    with the union of shard ``affected_ever`` masks — same fixed point
+    and ``PageRankResult`` contract as ``core.kernel_engine
+    .hybrid_pagerank`` and the f64 engine (L∞ ≤ 1e-6, DESIGN.md §8-§9).
+    """
+    import numpy as np
+
+    V = spec.num_vertices
+    v_pad = spec.padded_vertices
+    loop = _get_sharded_loop(mesh, spec, alpha=alpha, tol=tol_f32,
+                             frontier_tol=kernel_frontier_tol,
+                             prune_tol=kernel_prune_tol, max_iter=max_iter,
+                             closed_form=closed_form, prune=prune,
+                             expand=expand, use_kernel=use_kernel)
+    deg = graph.out_degree(include_self_loop=True)
+    inv_pad = jnp.pad((1.0 / deg).astype(jnp.float32), (0, v_pad - V))
+    r_pad = jnp.pad(init_ranks.astype(jnp.float32), (0, v_pad - V))
+    r_out, it, delta, ever, edges, verts = loop(sharded, graph, r_pad,
+                                                inv_pad, init_affected)
+    # hop the replicated results off the mesh so the f64 polish runs as a
+    # plain single-device jit (mixing committed mesh arrays into it would
+    # be a device mismatch)
+    k_ranks = jnp.asarray(np.asarray(r_out[:V]))
+    ever = jnp.asarray(np.asarray(ever))
+    it = jnp.asarray(np.asarray(it))
+    edges = jnp.asarray(np.asarray(edges))
+    verts = jnp.asarray(np.asarray(verts))
+    if not polish:
+        return pr.PageRankResult(k_ranks.astype(jnp.float64), it,
+                                 jnp.asarray(np.asarray(delta),
+                                             jnp.float64),
+                                 ever, edges, verts)
+    p = pr._pagerank_loop(graph, k_ranks.astype(jnp.float64), ever,
+                          alpha=alpha, tol=tol, frontier_tol=frontier_tol,
+                          prune_tol=prune_tol, max_iter=max_iter,
+                          closed_form=closed_form, prune=prune,
+                          expand=expand)
+    return pr.PageRankResult(p.ranks, it + p.iterations, p.delta,
+                             ever | p.affected_ever,
+                             edges + p.edges_processed,
+                             verts + p.vertices_processed)
+
+
+def sharded_kernel_pagerank(graph, init_ranks, init_affected, mesh, *,
+                            sharded=None, spec=None, pack_kw=None,
+                            **kw) -> pr.PageRankResult:
+    """One-shot ``engine="kernel"`` on a mesh: pack (unless the caller
+    maintains the sharded structure incrementally — see
+    ``ShardedKernelEngine``) and run the sharded hybrid ladder."""
+    from repro.kernels.pagerank_spmv.shard import pack_shards
+
+    if "model" not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no 'model' axis")
+    if sharded is None:
+        sharded, spec = pack_shards(graph, int(mesh.shape["model"]),
+                                    **(pack_kw or {}))
+    return sharded_hybrid_pagerank(mesh, sharded, spec, graph, init_ranks,
+                                   init_affected, **kw)
+
+
+class ShardedKernelEngine:
+    """Streaming owner of the sharded kernel path: one sharded pack per
+    bootstrap, per-batch delta routing + shard_map'd incremental update,
+    one compiled kernel loop — the mesh analogue of the ``ServeEngine``'s
+    single-pod kernel path.
+
+    All pack statics are pinned at construction (entry capacity, the
+    per-window entry bound, overlay size), so overflow ``repack``s never
+    change the ``ShardSpec`` and therefore never retrace the compiled
+    update or loop.  ``delta_budget`` bounds the routed per-shard rows of
+    each micro-batch (None = the full batch capacity — any batch fits);
+    overflowing it, a window's spill lanes or the locator overlay raises
+    ``ShardCapacityError`` naming the shards, which stream owners resolve
+    by ``repack`` (the serve engine counts these per shard).
+    """
+
+    def __init__(self, mesh, graph, *, pack_kw=None, delta_budget=None,
+                 use_kernel: bool = False, **loop_kw):
+        from repro.kernels.pagerank_spmv.shard import (build_sharded_apply,
+                                                       pack_shards)
+
+        if "model" not in mesh.axis_names:
+            raise ValueError(f"mesh {mesh.axis_names} has no 'model' axis")
+        self.mesh = mesh
+        self.num_shards = int(mesh.shape["model"])
+        pack_kw = dict(pack_kw or {})
+        pack_kw.setdefault("spill_lanes_per_window", 1)
+        self.sharded, spec = pack_shards(graph, self.num_shards, **pack_kw)
+        # pin every static: repacks must not change any shape or static
+        # field (max_entries_per_window at the trivially safe bound —
+        # a repack may redistribute entries to windows that grew)
+        self.spec = spec._replace(max_entries_per_window=spec.num_entries)
+        pack_kw["num_entries"] = self.spec.num_entries
+        pack_kw["max_entries_per_window"] = self.spec.num_entries
+        pack_kw["overlay_capacity"] = self.spec.overlay_capacity
+        pack_kw.pop("extra_entries", None)
+        self._pack_kw = pack_kw
+        self.delta_budget = delta_budget
+        self.use_kernel = use_kernel
+        self.loop_kw = loop_kw
+        self._apply = build_sharded_apply(mesh, self.spec)
+
+    def apply_update(self, update):
+        """Route Δ to its owning shards and apply under shard_map.
+        Raises ``ShardCapacityError`` (budget/spill/overlay) unchanged —
+        the structure is only replaced on success."""
+        import numpy as np
+
+        from repro.kernels.pagerank_spmv.shard import (ShardCapacityError,
+                                                       route_update)
+
+        routed = route_update(update, self.spec,
+                              del_budget=self.delta_budget,
+                              ins_budget=self.delta_budget)
+        new, dropped = self._apply(self.sharded, routed)
+        d = np.asarray(dropped)
+        if d.sum():
+            bad = tuple(int(s) for s in np.flatnonzero(d))
+            raise ShardCapacityError(
+                f"{int(d.sum())} insertions exceed spill capacity of "
+                f"their dst windows or the locator overlay on shards "
+                f"{bad}; repack with pack_shards (capacity sizing: "
+                "DESIGN.md §8-§9)", shards=bad)
+        self.sharded = new
+
+    def repack(self, graph):
+        """Rebuild the sharded pack from ``graph`` at the pinned shapes,
+        degrading the spill guarantee to the sharded minimum (1 lane) if
+        regrown windows no longer fit it — same recovery contract as the
+        single-pod serve path."""
+        from repro.kernels.pagerank_spmv.shard import pack_shards
+
+        try:
+            sharded, spec = pack_shards(graph, self.num_shards,
+                                        **self._pack_kw)
+        except ValueError:
+            sharded, spec = pack_shards(
+                graph, self.num_shards,
+                **{**self._pack_kw, "spill_lanes_per_window": 1})
+        spec = spec._replace(max_entries_per_window=self.spec.num_entries)
+        assert spec == self.spec, "repack changed pinned statics"
+        self.sharded = sharded
+
+    def solve(self, graph, init_ranks, init_affected,
+              **flags) -> pr.PageRankResult:
+        return sharded_hybrid_pagerank(
+            self.mesh, self.sharded, self.spec, graph, init_ranks,
+            init_affected, use_kernel=self.use_kernel,
+            **{**self.loop_kw, **flags})

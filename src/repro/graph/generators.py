@@ -174,3 +174,68 @@ class TemporalStream:
     def batch(self, i: int) -> np.ndarray:
         lo = self.preload_end + i * self.batch_size
         return self.edges[lo: lo + self.batch_size]
+
+
+STREAM_REGIMES = ("insert_only", "mixed", "delete_heavy")
+
+
+def update_stream(scale: int = 6, edge_factor: int = 4, *,
+                  regime: str = "mixed", graph: str = "rmat",
+                  num_batches: int = 8, batch_size: int = 24,
+                  seed: int = 0) -> Tuple[np.ndarray, int, list]:
+    """Seeded dynamic-update stream for cross-engine differential testing.
+
+    Returns ``(init_edges (k,2) int32, n, batches)`` where each batch is
+    a ``(deletions (a,2), insertions (b,2))`` pair.  The generator keeps
+    a host-side live-edge set so deletions target edges that exist;
+    every batch also mixes in the no-op edge cases incremental engines
+    must agree on (absent-edge deletions, duplicate-of-live insertions,
+    in-batch duplicates, delete-then-reinsert of the same edge).
+
+    ``graph``: "rmat" (skewed power-law, 2^scale vertices) or "uniform"
+    (Erdős–Rényi at the same vertex/edge counts).  ``regime`` sets the
+    deletion fraction per batch: "insert_only" 0, "mixed" ~1/3,
+    "delete_heavy" ~2/3.
+    """
+    if regime not in STREAM_REGIMES:
+        raise ValueError(f"unknown regime {regime!r}; one of "
+                         f"{STREAM_REGIMES}")
+    if graph == "rmat":
+        edges, n = rmat_edges(scale, edge_factor, seed=seed)
+    elif graph == "uniform":
+        n = 2 ** scale
+        edges, _ = erdos_renyi_edges(n, n * edge_factor, seed=seed)
+    else:
+        raise ValueError(f"unknown graph kind {graph!r}")
+    edges = np.unique(edges, axis=0)
+    edges = edges[edges[:, 0] != edges[:, 1]].astype(np.int32)
+    rng = np.random.default_rng(seed + 1)
+    live = {tuple(e) for e in edges.tolist()}
+
+    n_del = {"insert_only": 0, "mixed": batch_size // 3,
+             "delete_heavy": (2 * batch_size) // 3}[regime]
+    n_ins = batch_size - n_del
+    batches = []
+    for _ in range(num_batches):
+        dels = []
+        if n_del and live:
+            pool = sorted(live)
+            picks = rng.choice(len(pool), size=min(n_del, len(pool)),
+                               replace=False)
+            dels = [pool[i] for i in picks]
+        # absent-edge deletion: must be a no-op on every engine
+        u, v = rng.integers(0, n, size=2)
+        if u != v and (int(u), int(v)) not in live:
+            dels.append((int(u), int(v)))
+        e = rng.integers(0, n, size=(n_ins, 2))
+        ins = [tuple(x) for x in e[e[:, 0] != e[:, 1]].tolist()]
+        if ins:
+            ins.append(ins[0])                    # in-batch duplicate
+        if dels:
+            ins.append(dels[0])                   # delete -> reinsert
+        live -= set(dels)
+        live |= set(ins)
+        batches.append((
+            np.asarray(dels, np.int32).reshape(-1, 2),
+            np.asarray(ins, np.int32).reshape(-1, 2)))
+    return edges, n, batches

@@ -245,13 +245,19 @@ def frontier_spmv_padded(packed: PackedGraph, rsc: jax.Array,
     rsc: f32/bf16[V_pad] scaled ranks R/d — already padded, so an
     iteration loop that keeps its rank buffer padded pays no per-call
     pad/slice; active_window: bool[NW], precomputed by the caller.
+
+    rsc may also be LONGER than NW*VB: a shard-local pack (shard.py)
+    scatters into its own window range but gathers by *global* src from
+    the full replicated vector — the whole rsc block is prefetched
+    either way, only its length differs.
     """
     ne, be = packed.src.shape
     vb = packed.vb
     nw = packed.num_windows
     v_pad = nw * vb
-    if rsc.shape[0] != v_pad:
+    if rsc.shape[0] < v_pad:
         rsc = jnp.pad(rsc, (0, v_pad - rsc.shape[0]))
+    v_rsc = rsc.shape[0]
 
     # --- device-side active-entry compaction (stable order) ---------------
     entry_active = active_window[packed.window]
@@ -282,7 +288,7 @@ def frontier_spmv_padded(packed: PackedGraph, rsc: jax.Array,
             pl.BlockSpec((1, be), lambda i, sel, win, first, nact: (sel[i], 0)),
             pl.BlockSpec((1, be), lambda i, sel, win, first, nact: (sel[i], 0)),
             pl.BlockSpec((1, be), lambda i, sel, win, first, nact: (sel[i], 0)),
-            pl.BlockSpec((v_pad,), lambda i, sel, win, first, nact: (0,)),
+            pl.BlockSpec((v_rsc,), lambda i, sel, win, first, nact: (0,)),
         ],
         out_specs=pl.BlockSpec(
             (1, vb), lambda i, sel, win, first, nact: (win[i], 0)),

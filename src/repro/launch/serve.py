@@ -44,7 +44,12 @@ def main(argv=None):
                     help="rank-update engine: 'xla' (f64 segment_sum) or "
                          "'kernel' (Pallas frontier-gated SpMV with "
                          "device-side incremental PackedGraph maintenance "
-                         "and the f32→f64 hybrid-precision ladder)")
+                         "and the f32→f64 hybrid-precision ladder); "
+                         "combined with --mesh the kernel path shards the "
+                         "packed structure by dst-window ranges over the "
+                         "mesh's model axis (on CPU force devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N, DESIGN.md §9)")
     ap.add_argument("--events", type=int, default=5000,
                     help="number of post-preload edge events to feed")
     ap.add_argument("--flush-size", type=int, default=64)
@@ -74,9 +79,11 @@ def main(argv=None):
     mesh = _resolve_mesh(args.mesh)
     ds = load_temporal(args.dataset)
     graph, events = preload_graph_and_feed(ds, args.events)
+    shards = (f" shards={int(mesh.shape['model'])}"
+              if mesh is not None and args.engine == "kernel" else "")
     print(f"dataset {ds.name}: |V|={ds.num_vertices:,} preload="
           f"{int(graph.num_valid_edges()):,} events={len(events):,} "
-          f"method={args.method} engine={args.engine} "
+          f"method={args.method} engine={args.engine}{shards} "
           f"flush={args.flush_size}/{args.flush_interval_ms:g}ms")
 
     metrics = ServeMetrics()

@@ -20,8 +20,8 @@ anyway, so the decision adds no extra passes for frontier methods.
 engine (repro.dist) — ingest/snapshot/query stay host-side either way.
 
 ``engine="kernel"`` makes the Pallas frontier-gated SpMV the serving
-hot path (single pod): bootstrap packs the graph into the blocked
-``PackedGraph`` once, every micro-batch maintains it *on device* with
+hot path: bootstrap packs the graph into the blocked ``PackedGraph``
+once, every micro-batch maintains it *on device* with
 ``apply_batch_packed`` (no host repack), and dynamic-method solves run
 the hybrid-precision ladder (f32 kernel iterations + f64 polish,
 core.kernel_engine.hybrid_pagerank).  Published snapshots are unchanged
@@ -31,6 +31,20 @@ nothing to skip and the cold start wants f64 end-to-end.  If a window's
 spill lanes run out, the engine repacks from the current graph at the
 same capacity (``metrics.packed_rebuilds`` counts these) — the kernels
 never recompile because every shape is pinned at bootstrap.
+
+``engine="kernel"`` + ``mesh=`` is the **sharded** kernel path: the
+packed structure is partitioned by dst-window ranges over the mesh's
+``model`` axis (kernels.pagerank_spmv.shard), each micro-batch's deltas
+are routed to their owning shard and applied under shard_map, and the
+hybrid ladder runs the shard_map'd kernel loop with a replicated rank
+vector (dist.pagerank_dist.ShardedKernelEngine).  Overflow recovery is
+per the single-pod contract — repack at pinned shapes, zero recompiles —
+with ``metrics.packed_rebuilds_by_shard`` attributing which shards
+overflowed; ``kernel_opts["delta_budget"]`` bounds routed per-shard
+rows per batch (None = whole-batch capacity).  Engine work counters
+(``edges_processed``/``vertices_processed``) are psum-aggregated across
+shards by the solve and land in the same metrics fields as the
+single-pod path.
 ``kernel_opts`` tunes the path: pack sizing (``be``, ``vb``,
 ``spill_lanes_per_window``, ``num_entries``), ``use_kernel`` (True =
 Pallas kernel [interpret mode off-TPU], False = jnp oracle, "auto" =
@@ -85,9 +99,6 @@ class ServeEngine:
                  ppr_index=None, clock=time.monotonic, **pr_kw):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}; options {ENGINES}")
-        if engine == "kernel" and mesh is not None:
-            raise ValueError("engine='kernel' is the single-pod path; "
-                             "drop mesh= or use engine='xla'")
         self.ingest = ingest
         self.store = store
         self.metrics = metrics if metrics is not None else ServeMetrics()
@@ -98,11 +109,13 @@ class ServeEngine:
         self._pack_kw = {**KERNEL_PACK_DEFAULTS,
                          **{k: opts.pop(k) for k in _PACK_KEYS
                             if k in opts}}
+        self._delta_budget = opts.pop("delta_budget", None)
         use_kernel = opts.pop("use_kernel", "auto")
         if use_kernel == "auto":
             use_kernel = jax.default_backend() == "tpu"
         self._kernel_kw = dict(use_kernel=bool(use_kernel), **opts)
         self._packed = None
+        self._sharded = None   # dist.ShardedKernelEngine (kernel + mesh)
         self.static_fallback_frac = static_fallback_frac
         # opt-in walk index (repro.ppr): an IndexConfig to build at
         # bootstrap, or a prebuilt WalkIndex valid for `graph`
@@ -130,7 +143,24 @@ class ServeEngine:
         reproduces the index bit-identically from the replayed graph."""
         if ranks is None:
             ranks = self._solve("static", self._graph, None, None).ranks
-        if self.engine == "kernel" and self._packed is None:
+        if self.engine == "kernel" and self.mesh is not None \
+                and self._sharded is None:
+            from repro.dist.pagerank_dist import ShardedKernelEngine
+            pack_kw = dict(self._pack_kw)
+            if "num_entries" not in pack_kw:
+                spare = (self._graph.edge_capacity
+                         - int(self._graph.num_valid_edges()))
+                pack_kw.setdefault("extra_entries",
+                                   -(-spare // pack_kw["be"]))
+            pack_kw.setdefault(
+                "overlay_capacity", max(1024, 64 * self.ingest.capacity))
+            kw = dict(self._kernel_kw)
+            self._sharded = ShardedKernelEngine(
+                self.mesh, self._graph, pack_kw=pack_kw,
+                delta_budget=self._delta_budget,
+                use_kernel=kw.pop("use_kernel", False), **kw)
+        if self.engine == "kernel" and self.mesh is None \
+                and self._packed is None:
             from repro.kernels.pagerank_spmv.update import pack_graph
             if "num_entries" not in self._pack_kw:
                 # mirror the edge list's stream headroom as empty tail
@@ -174,7 +204,19 @@ class ServeEngine:
             return False
         t0 = self._clock()
         graph_new = apply_batch(self._graph, batch.update)
-        if self._packed is not None:
+        if self._sharded is not None:
+            from repro.kernels.pagerank_spmv.shard import ShardCapacityError
+            try:
+                self._sharded.apply_update(batch.update)
+            except ShardCapacityError as e:
+                # budget/spill/overlay exhaustion on some shard(s):
+                # repack every shard at the pinned shapes (defragments
+                # freed lanes back into window order, zero recompiles).
+                # Only the typed capacity error means "recoverable by
+                # repack" — anything else is a real bug and propagates.
+                self._sharded.repack(graph_new)
+                self.metrics.record_packed_rebuild(shards=e.shards)
+        elif self._packed is not None:
             from repro.kernels.pagerank_spmv.update import \
                 apply_batch_packed
             try:
@@ -219,7 +261,9 @@ class ServeEngine:
             latency, batch.num_events, batch.num_coalesced,
             affected=int(jnp.sum(res.affected_ever)),
             iterations=int(res.iterations), fallback=fallback,
-            walks_resampled=resampled)
+            walks_resampled=resampled,
+            edges_processed=int(res.edges_processed),
+            vertices_processed=int(res.vertices_processed))
         return True
 
     def _repack(self, graph: EdgeListGraph):
@@ -244,6 +288,15 @@ class ServeEngine:
                init_state: Optional[tuple] = None):
         graph_prev = graph_prev if graph_prev is not None else graph_new
         if self.mesh is not None:
+            if self._sharded is not None and method in DYNAMIC_METHODS:
+                init_ranks, init_affected = (
+                    init_state if init_state is not None
+                    else build_initial_state(graph_prev, graph_new, update,
+                                             prev_ranks, method))
+                return self._sharded.solve(graph_new, init_ranks,
+                                           init_affected,
+                                           **KERNEL_FLAGS[method],
+                                           **self.pr_kw)
             return distributed_pagerank(graph_prev, graph_new, update,
                                         prev_ranks, method, self.mesh,
                                         init_state=init_state,

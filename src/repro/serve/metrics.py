@@ -14,12 +14,20 @@ CLI report:
     and last completed batch;
   * ``affected_mean`` / ``iterations_mean`` — per-batch |affected| and
     solver iterations (the paper's work proxies);
+  * ``edges_processed`` / ``vertices_processed`` — the engines'
+    window-granular (kernel) or per-vertex (XLA) work counters summed
+    over all batches, so serving cost is comparable across engines and
+    mesh sizes in the same units as ``PageRankResult``;
+  * ``packed_rebuilds`` (+ ``packed_rebuilds_by_shard`` on the sharded
+    kernel path) — spill/overlay/budget overflow repacks, attributed to
+    the shards that overflowed;
   * admission/fallback/coalescing counters.
 """
 from __future__ import annotations
 
 import time
-from typing import List
+from collections import Counter
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -41,6 +49,9 @@ class ServeMetrics:
         self.static_fallbacks = 0
         self.walks_resampled = 0
         self.packed_rebuilds = 0   # kernel engine spill-overflow repacks
+        self.packed_rebuilds_by_shard: Counter = Counter()
+        self.edges_processed = 0
+        self.vertices_processed = 0
         self._t_first_batch = None
         self._t_last_batch = None
         # queries
@@ -59,7 +70,8 @@ class ServeMetrics:
 
     def record_batch(self, latency_s: float, num_events: int,
                      num_coalesced: int, affected: int, iterations: int,
-                     fallback: bool, walks_resampled: int = 0):
+                     fallback: bool, walks_resampled: int = 0,
+                     edges_processed: int = 0, vertices_processed: int = 0):
         now = self._clock()
         if self._t_first_batch is None:
             self._t_first_batch = now
@@ -71,11 +83,17 @@ class ServeMetrics:
         self.events_applied += int(num_events)
         self.events_coalesced += int(num_coalesced)
         self.walks_resampled += int(walks_resampled)
+        self.edges_processed += int(edges_processed)
+        self.vertices_processed += int(vertices_processed)
         if fallback:
             self.static_fallbacks += 1
 
-    def record_packed_rebuild(self):
+    def record_packed_rebuild(self, shards: Optional[Sequence[int]] = None):
+        """One overflow repack; ``shards`` names the overflowing shards
+        on the sharded kernel path (None/empty = single-pod)."""
         self.packed_rebuilds += 1
+        for s in shards or ():
+            self.packed_rebuilds_by_shard[int(s)] += 1
 
     def record_query(self, staleness_events: int):
         self.queries_served += 1
@@ -104,7 +122,12 @@ class ServeMetrics:
                              if self.batch_iterations else 0.0),
             static_fallbacks=self.static_fallbacks,
             walks_resampled=self.walks_resampled,
+            edges_processed=self.edges_processed,
+            vertices_processed=self.vertices_processed,
             packed_rebuilds=self.packed_rebuilds,
+            packed_rebuilds_by_shard={
+                str(k): v
+                for k, v in sorted(self.packed_rebuilds_by_shard.items())},
             admission_accepted=self.accepted,
             admission_rejected=self.rejected,
         )

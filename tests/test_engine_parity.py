@@ -1,0 +1,169 @@
+"""Cross-engine differential harness: one seeded update stream, three
+engines, lock-step assertions.
+
+``run_parity`` drives the SAME stream (graph/generators.update_stream:
+insert/delete mixes over skewed RMAT or uniform graphs, deletion-heavy
+and insert-only regimes) through
+
+  * the f64 XLA engine (``update_pagerank``),
+  * the single-pod kernel engine (incrementally maintained PackedGraph
+    + ``hybrid_pagerank``), and
+  * the sharded kernel engine (window-range shards on a ``model`` mesh,
+    routed deltas, shard_map'd hybrid ladder),
+
+asserting at EVERY micro-batch that the surviving-edge sets are
+identical (graph vs packed vs sharded oracle) and that pairwise rank L1
+≤ 1e-6 — each engine carries its *own* rank chain, so drift compounds
+and cannot hide.  Parameterized over frontier / frontier_prune.
+
+The in-process tests run the full three-engine harness on a 1-way mesh
+(every sharded code path: routing, stacking, shard_map, psum); the
+``slow``-marked subprocess test reruns it on a real 4-way forced-device
+mesh (conftest keeps this process at one device).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.core import pagerank as pr
+from repro.core.api import KERNEL_FLAGS, update_pagerank
+from repro.core.kernel_engine import hybrid_pagerank
+from repro.graph.dynamic import (apply_batch, make_batch_update,
+                                 touched_vertices_mask)
+from repro.graph.generators import update_stream
+from repro.graph.structure import from_coo
+from repro.kernels.pagerank_spmv.shard import sharded_edge_set
+from repro.kernels.pagerank_spmv.update import (apply_batch_packed,
+                                                pack_graph, packed_edge_set)
+
+_PACK = dict(be=32, vb=16, spill_lanes_per_window=64)
+
+
+def _edge_set(g):
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    valid = np.asarray(g.valid)
+    return set(zip(src[valid].tolist(), dst[valid].tolist()))
+
+
+def run_parity(regime, method, *, graph="rmat", seed=0, num_batches=6,
+               num_shards=None, scale=5, edge_factor=4, batch_size=18,
+               l1_tol=1e-6):
+    """Drive one stream through all engines; assert in lock-step.
+
+    ``num_shards``: include the sharded kernel engine on a mesh over the
+    first ``num_shards`` visible devices (None = xla vs kernel only).
+    Returns the number of batches driven.
+    """
+    init, n, batches = update_stream(scale, edge_factor, regime=regime,
+                                     graph=graph, num_batches=num_batches,
+                                     batch_size=batch_size, seed=seed)
+    cap = len(init) + num_batches * (batch_size + 2) + 64
+    g = from_coo(init[:, 0], init[:, 1], n, edge_capacity=cap)
+    packed = pack_graph(g, **_PACK)
+    sharded = None
+    if num_shards:
+        from jax.sharding import Mesh
+
+        from repro.dist.pagerank_dist import ShardedKernelEngine
+        mesh = Mesh(np.array(jax.devices()[:num_shards]), ("model",))
+        sharded = ShardedKernelEngine(mesh, g, pack_kw=dict(_PACK))
+    flags = KERNEL_FLAGS[method]
+    r0 = pr.static_pagerank(g).ranks
+    ranks = {"xla": r0, "kernel": r0, "sharded": r0}
+    for bi, (dels, ins) in enumerate(batches):
+        upd = make_batch_update(dels, ins, max(8, len(dels)),
+                                max(8, len(ins)))
+        g_new = apply_batch(g, upd)
+        want_edges = _edge_set(g_new)
+        packed = apply_batch_packed(packed, upd)
+        assert packed_edge_set(packed) == want_edges, (regime, method, bi)
+        touched = touched_vertices_mask(upd, n)
+        aff = pr.initial_affected(g, g_new, touched)
+        out = {"xla": update_pagerank(g, g_new, upd, ranks["xla"], method),
+               "kernel": hybrid_pagerank(g_new, packed, ranks["kernel"],
+                                         aff, use_kernel=False, **flags)}
+        if sharded is not None:
+            sharded.apply_update(upd)
+            assert sharded_edge_set(sharded.sharded, sharded.spec) \
+                == want_edges, (regime, method, bi)
+            out["sharded"] = sharded.solve(g_new, ranks["sharded"], aff,
+                                           **flags)
+        names = list(out)
+        for i, a in enumerate(names):
+            for b in names[i + 1:]:
+                l1 = float(jnp.sum(jnp.abs(out[a].ranks - out[b].ranks)))
+                assert l1 <= l1_tol, (regime, method, bi, a, b, l1)
+        g = g_new
+        for k in out:
+            ranks[k] = out[k].ranks
+    return len(batches)
+
+
+# ---------------------------------------------------------------------------
+# in-process: full three-engine harness, 1-way mesh
+# ---------------------------------------------------------------------------
+
+_SEEDS = {("insert_only", "frontier"): 11,
+          ("insert_only", "frontier_prune"): 12,
+          ("mixed", "frontier"): 13,
+          ("mixed", "frontier_prune"): 14,
+          ("delete_heavy", "frontier"): 15,
+          ("delete_heavy", "frontier_prune"): 16}
+
+
+@pytest.mark.parametrize("method", ["frontier", "frontier_prune"])
+@pytest.mark.parametrize("regime",
+                         ["insert_only", "mixed", "delete_heavy"])
+def test_engine_parity_rmat(regime, method):
+    assert run_parity(regime, method, num_shards=1,
+                      seed=_SEEDS[(regime, method)]) >= 4
+
+
+@pytest.mark.parametrize("method", ["frontier", "frontier_prune"])
+def test_engine_parity_uniform(method):
+    assert run_parity("mixed", method, graph="uniform", num_shards=1,
+                      seed=17) >= 4
+
+
+# ---------------------------------------------------------------------------
+# subprocess: the same harness on a real >= 4-way host-device mesh
+# ---------------------------------------------------------------------------
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_engine_parity_four_way_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    code = textwrap.dedent("""
+        import os, sys
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        sys.path.insert(0, "tests")
+        import repro
+        from test_engine_parity import run_parity
+        from test_kernel_sharded import run_trace_stream
+        run_parity("mixed", "frontier_prune", num_shards=4, seed=3)
+        run_parity("delete_heavy", "frontier", num_shards=4, seed=5,
+                   num_batches=4)
+        run_parity("insert_only", "frontier_prune", graph="uniform",
+                   num_shards=4, seed=7, num_batches=4)
+        # acceptance: a 50-batch stream on the 4-way mesh compiles one
+        # route + one per-shard update + one kernel loop, total
+        delta = run_trace_stream(4, num_batches=50)
+        assert not any(delta.values()), delta
+        print("PARITY4 OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd=_REPO, timeout=540)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "PARITY4 OK" in r.stdout

@@ -169,11 +169,16 @@ def test_update_pagerank_kernel_engine_matches_xla(method):
     assert int(ker.vertices_processed) > 0
 
 
-def test_kernel_engine_rejects_mesh():
+def test_kernel_engine_mesh_needs_model_axis():
+    # engine="kernel" + mesh is the sharded path (PR 5); it shards over
+    # the mesh's model axis and must reject a mesh that lacks one
+    import jax
+    from jax.sharding import Mesh
     edges, n = erdos_renyi_edges(32, 64, seed=0)
     g = from_coo(edges[:, 0], edges[:, 1], n)
-    with pytest.raises(ValueError, match="single-pod"):
-        update_pagerank(g, g, None, None, "static", mesh=object(),
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    with pytest.raises(ValueError, match="no 'model' axis"):
+        update_pagerank(g, g, None, None, "static", mesh=mesh,
                         engine="kernel")
 
 

@@ -1,0 +1,232 @@
+"""Sharded kernel path: compilation invariants and delta-routing
+negative paths.
+
+The streaming contract mirrors the single-pod kernel engine
+(tests/test_kernel_serving.py): a temporal stream compiles exactly one
+delta route, one per-shard update step and one kernel loop — asserted
+via ``kernels.pagerank_spmv.shard.TRACE_COUNTS`` over a 50-batch
+stream — and overflow recovery (repack at pinned shapes) must not
+retrace anything.  Routing overflow is a checked ``ShardCapacityError``
+naming the shards, never silent truncation; a batch whose edges all
+land on one shard still round-trips exactly.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from jax.sharding import Mesh
+
+from repro.core import pagerank as pr
+from repro.dist.pagerank_dist import ShardedKernelEngine
+from repro.graph.dynamic import (apply_batch, make_batch_update,
+                                 touched_vertices_mask)
+from repro.graph.generators import update_stream
+from repro.graph.structure import from_coo
+from repro.kernels.pagerank_spmv.shard import (ShardCapacityError,
+                                               TRACE_COUNTS,
+                                               apply_batch_sharded_host,
+                                               pack_shards, route_update,
+                                               sharded_edge_set)
+from repro.serve import IngestQueue, RankStore, ServeEngine, ServeMetrics
+
+N = 48
+
+
+def _graph(seed=0, n=N, m=150, extra=256):
+    rng = np.random.default_rng(seed)
+    init = np.unique(rng.integers(0, n, size=(m, 2)), axis=0)
+    init = init[init[:, 0] != init[:, 1]]
+    return from_coo(init[:, 0], init[:, 1], n,
+                    edge_capacity=len(init) + extra)
+
+
+def _one_shard_mesh():
+    return Mesh(np.asarray(jax.devices()[:1]), ("model",))
+
+
+# ---------------------------------------------------------------------------
+# trace counters: 50-batch stream = one route + one update + one loop
+# ---------------------------------------------------------------------------
+
+def run_trace_stream(num_shards, num_batches=50, seed=21):
+    """Shared by the in-process 1-way test and the 4-way subprocess in
+    the differential harness: returns the TRACE_COUNTS delta over
+    batches 2..num_batches (must be all zero)."""
+    init, n, batches = update_stream(5, 4, regime="mixed",
+                                     num_batches=num_batches,
+                                     batch_size=12, seed=seed)
+    # headroom for the stream's net insertions: the 50 batches must not
+    # overflow a spill lane (this test asserts compile counts, the
+    # overflow path is test_sharded_repack_fallback_no_retrace)
+    cap = len(init) + num_batches * 32 + 64
+    g = from_coo(init[:, 0], init[:, 1], n, edge_capacity=cap)
+    mesh = Mesh(np.asarray(jax.devices()[:num_shards]), ("model",))
+    eng = ShardedKernelEngine(
+        mesh, g, pack_kw=dict(be=32, vb=16,
+                              spill_lanes_per_window=num_batches * 16))
+    ranks = pr.static_pagerank(g).ranks
+
+    def one(dels, ins):
+        nonlocal g, ranks
+        upd = make_batch_update(dels, ins, 8, 16)
+        g_new = apply_batch(g, upd)
+        eng.apply_update(upd)
+        aff = pr.initial_affected(g, g_new,
+                                  touched_vertices_mask(upd, n))
+        res = eng.solve(g_new, ranks, aff, closed_form=True, prune=True,
+                        expand=True)
+        g, ranks = g_new, res.ranks
+
+    one(*batches[0])                       # batch 1 compiles everything
+    before = dict(TRACE_COUNTS)
+    for dels, ins in batches[1:]:
+        one(dels, ins)
+    return {k: TRACE_COUNTS[k] - before.get(k, 0)
+            for k in ("route_update", "sharded_apply",
+                      "sharded_kernel_loop")}
+
+
+def test_fifty_batch_stream_compiles_once():
+    delta = run_trace_stream(1, num_batches=50)
+    assert delta == {"route_update": 0, "sharded_apply": 0,
+                     "sharded_kernel_loop": 0}, delta
+
+
+# ---------------------------------------------------------------------------
+# repack-fallback keeps pinned shapes: recovery must not retrace
+# ---------------------------------------------------------------------------
+
+def test_sharded_repack_fallback_no_retrace():
+    # tiny spill headroom + skewed growth (inserts pile into the upper
+    # dst windows): lanes overflow, the engine repacks at the pinned
+    # ShardSpec — serving stays correct with zero recompilation, and the
+    # per-shard rebuild attribution lands in the metrics
+    rng = np.random.default_rng(13)
+    feed = []
+    for _ in range(160):
+        if rng.random() < 0.75:
+            u, v = int(rng.integers(0, N)), int(rng.integers(32, N))
+        else:
+            u, v = int(rng.integers(0, N)), int(rng.integers(0, 32))
+        if u != v:
+            feed.append((u, v, "i" if rng.random() < 0.85 else "d"))
+
+    def serve(engine_name, mesh=None, kernel_opts=None):
+        ingest = IngestQueue(flush_size=16, flush_interval=0.0)
+        store = RankStore()
+        metrics = ServeMetrics()
+        eng = ServeEngine(_graph(2, m=300), ingest, store,
+                          metrics=metrics, method="frontier_prune",
+                          engine=engine_name, mesh=mesh,
+                          kernel_opts=kernel_opts,
+                          static_fallback_frac=1.0)
+        eng.bootstrap()
+        for u, v, kind in feed:
+            (ingest.submit_insert if kind == "i"
+             else ingest.submit_delete)(u, v)
+            eng.step()
+        eng.drain()
+        return store.snapshot(), metrics
+
+    snap_x, _ = serve("xla")
+    before = dict(TRACE_COUNTS)
+    snap_s, m = serve("kernel", mesh=_one_shard_mesh(),
+                      kernel_opts=dict(use_kernel=False, be=8, vb=16,
+                                       spill_lanes_per_window=8))
+    after = dict(TRACE_COUNTS)
+    assert m.packed_rebuilds >= 1
+    assert m.packed_rebuilds_by_shard.get(0, 0) >= 1
+    linf = float(jnp.max(jnp.abs(snap_s.ranks - snap_x.ranks)))
+    assert linf <= 1e-6, linf
+    # pinned shapes/statics: at most the one initial trace per function,
+    # overflow recovery must not retrace
+    for k, v in after.items():
+        assert v - before.get(k, 0) <= 1, (k, before, after)
+
+
+# ---------------------------------------------------------------------------
+# delta routing negative paths (mesh-free: routing is a pure function)
+# ---------------------------------------------------------------------------
+
+def test_route_budget_overflow_is_checked_error():
+    g = _graph(0)
+    sharded, spec = pack_shards(g, 4, be=16, vb=8,
+                                spill_lanes_per_window=16)
+    # 6 insertions all landing on shard 0's dst range, budget of 2
+    ins = np.asarray([[i, 1] for i in range(2, 8)], np.int32)
+    upd = make_batch_update(np.zeros((0, 2), np.int32), ins, 4, 8)
+    with pytest.raises(ShardCapacityError,
+                       match="per-shard delta budget") as e:
+        route_update(upd, spec, ins_budget=2)
+    assert e.value.shards == (0,)
+    # deletions overflow independently of insertions
+    live = sorted(sharded_edge_set(sharded, spec))
+    vps = spec.vertices_per_shard
+    s0 = [e for e in live if e[1] < vps][:4]
+    upd = make_batch_update(np.asarray(s0, np.int32),
+                            np.zeros((0, 2), np.int32), 8, 4)
+    with pytest.raises(ShardCapacityError, match="delta budget"):
+        route_update(upd, spec, del_budget=2)
+
+
+def test_all_edges_one_shard_roundtrip():
+    g = _graph(1)
+    sharded, spec = pack_shards(g, 4, be=16, vb=8,
+                                spill_lanes_per_window=16)
+    vps = spec.vertices_per_shard
+    want = sharded_edge_set(sharded, spec)
+    # every edge of the batch lands on shard 2: dst in [2*vps, 3*vps)
+    lo = 2 * vps
+    ins = np.asarray([[u, lo + (u % vps)] for u in range(6)], np.int32)
+    ins = ins[ins[:, 0] != ins[:, 1]]
+    dels = np.asarray([e for e in sorted(want)
+                       if lo <= e[1] < lo + vps][:2], np.int32)
+    upd = make_batch_update(dels.reshape(-1, 2), ins, 8, 8)
+    routed = route_update(upd, spec)
+    kept_per_shard = np.asarray(jnp.sum(routed.ins_mask, axis=1))
+    assert kept_per_shard[2] == len(ins) and kept_per_shard.sum() \
+        == len(ins), kept_per_shard
+    out = apply_batch_sharded_host(sharded, spec, upd)
+    want = (want - {tuple(e) for e in dels.reshape(-1, 2).tolist()}) \
+        | {tuple(e) for e in ins.tolist()}
+    assert sharded_edge_set(out, spec) == want
+
+
+def test_sharded_pack_requires_spill():
+    g = _graph(0)
+    with pytest.raises(ValueError, match="spill_lanes_per_window >= 1"):
+        pack_shards(g, 2, be=16, vb=8, spill_lanes_per_window=0)
+
+
+# ---------------------------------------------------------------------------
+# public API: one-shot update_pagerank(engine="kernel", mesh=...)
+# ---------------------------------------------------------------------------
+
+def test_update_pagerank_sharded_kernel_one_shot():
+    from repro.core.api import update_pagerank
+    from repro.graph.generators import random_batch_update
+    g = _graph(5, m=300)
+    r0 = pr.static_pagerank(g).ranks
+    live = np.stack([np.asarray(g.src), np.asarray(g.dst)], 1)[
+        np.asarray(g.valid)]
+    dele, ins = random_batch_update(live, N, 16, seed=6)
+    upd = make_batch_update(dele, ins, 32, 32)
+    g2 = apply_batch(g, upd)
+    xla = update_pagerank(g, g2, upd, r0, "frontier_prune")
+    shd = update_pagerank(g, g2, upd, r0, "frontier_prune",
+                          mesh=_one_shard_mesh(), engine="kernel",
+                          pack_kw=dict(be=32, vb=16))
+    linf = float(jnp.max(jnp.abs(xla.ranks - shd.ranks)))
+    assert linf <= 1e-6, linf
+    assert shd.ranks.dtype == jnp.float64
+    assert int(shd.edges_processed) > 0
+    assert int(shd.vertices_processed) > 0
+    # a single-pod packed= cannot seed the sharded path — rejecting it
+    # beats silently discarding the caller's maintained structure
+    from repro.kernels.pagerank_spmv.update import pack_graph
+    with pytest.raises(ValueError, match="single-pod structure"):
+        update_pagerank(g, g2, upd, r0, "frontier_prune",
+                        mesh=_one_shard_mesh(), engine="kernel",
+                        packed=pack_graph(g2, be=32, vb=16))
