@@ -1,0 +1,104 @@
+"""Bench regression gate: compare a fresh ``run.py --json`` result set
+against the last committed ``BENCH_*.json`` and fail (exit 1) if any
+kernel-vs-XLA events/s ratio fell more than ``--tolerance`` (default
+10%) below its committed value.
+
+Only the ``*_modeled`` ratio rows gate by default — they are
+roofline-normalized from the engines' work counters, so they are stable
+across host hardware (the wall-clock ratios on a shared CI runner are
+not).  ``--all-ratios`` widens the gate to every ``events_per_s_ratio``
+row for local use.
+
+    PYTHONPATH=src:. python benchmarks/run.py --json /tmp/bench.json
+    python benchmarks/check_regression.py /tmp/bench.json
+
+The baseline is auto-discovered as the lexicographically newest
+``BENCH_*.json`` in the repo root (the dated filenames sort by date), or
+passed explicitly with ``--baseline``.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+_RATIO = re.compile(r"events_per_s_ratio=([0-9.]+)")
+
+
+def ratio_rows(results: dict, modeled_only: bool = True) -> dict:
+    """{name: ratio} for every row whose derived carries a ratio."""
+    out = {}
+    for name, row in results.items():
+        if modeled_only and not name.endswith("_modeled"):
+            continue
+        m = _RATIO.search(row.get("derived", "") or "")
+        if m:
+            out[name] = float(m.group(1))
+    return out
+
+
+def latest_baseline(repo_root: str) -> str | None:
+    paths = sorted(glob.glob(os.path.join(repo_root, "BENCH_*.json")))
+    return paths[-1] if paths else None
+
+
+def check(current_path: str, baseline_path: str, tolerance: float,
+          modeled_only: bool = True) -> int:
+    with open(current_path) as f:
+        current = ratio_rows(json.load(f), modeled_only)
+    with open(baseline_path) as f:
+        baseline = ratio_rows(json.load(f), modeled_only)
+    if not baseline:
+        print(f"no ratio rows in baseline {baseline_path}; nothing to gate")
+        return 0
+    failures = []
+    for name, base in sorted(baseline.items()):
+        cur = current.get(name)
+        if cur is None:
+            failures.append(f"{name}: missing from current run "
+                            f"(baseline {base:.2f})")
+            continue
+        floor = base * (1.0 - tolerance)
+        status = "FAIL" if cur < floor else "ok"
+        print(f"{status}  {name}: {cur:.2f} vs baseline {base:.2f} "
+              f"(floor {floor:.2f})")
+        if cur < floor:
+            failures.append(f"{name}: {cur:.2f} < {floor:.2f} "
+                            f"({base:.2f} - {tolerance:.0%})")
+    if failures:
+        print(f"\n{len(failures)} ratio regression(s) beyond "
+              f"{tolerance:.0%}:")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print(f"\nall {len(baseline)} gated ratios within {tolerance:.0%} "
+          "of baseline")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh run.py --json output")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH_*.json (default: newest in "
+                         "the repo root)")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional drop below baseline")
+    ap.add_argument("--all-ratios", action="store_true",
+                    help="gate wall-clock ratios too, not just modeled")
+    args = ap.parse_args(argv)
+    baseline = args.baseline or latest_baseline(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if baseline is None:
+        print("no committed BENCH_*.json baseline found; nothing to gate")
+        return 0
+    print(f"baseline: {baseline}")
+    return check(args.current, baseline, args.tolerance,
+                 modeled_only=not args.all_ratios)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

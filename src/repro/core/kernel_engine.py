@@ -52,16 +52,16 @@ class KernelPRResult(NamedTuple):
     vertices_processed: jax.Array  # i64[] Σ VB per active window
 
 
-@partial(jax.jit, static_argnames=("closed_form", "prune", "expand",
-                                   "max_iter", "use_kernel"))
-def kernel_pagerank_loop(graph: EdgeListGraph, packed: PackedGraph,
-                         init_ranks: jax.Array, init_affected: jax.Array, *,
-                         alpha: float = ALPHA, tol: float = 1e-7,
-                         frontier_tol: float = 1e-5, prune_tol: float = 1e-5,
-                         max_iter: int = 500, closed_form: bool = False,
-                         prune: bool = False, expand: bool = True,
-                         use_kernel: bool = True) -> KernelPRResult:
-    TRACE_COUNTS["kernel_pagerank_loop"] += 1          # trace-time only
+def _loop_setup(graph, packed, *, alpha, tol, frontier_tol, prune_tol,
+                max_iter, closed_form, prune, expand, use_kernel):
+    """Shared (cond, body, state0) builder for the plain and fused loops.
+
+    Both entry points run the IDENTICAL body/cond closures, so the fused
+    path (which peels the first sweep out of the while_loop) is bitwise
+    equal to the plain loop — ``cond(state0)`` is always true (delta
+    starts at inf, it at 0), so peeling one ``body`` application off the
+    front is a pure re-association.
+    """
     V = graph.num_vertices
     nw, vb = packed.num_windows, packed.vb
     v_pad = nw * vb
@@ -104,13 +104,125 @@ def kernel_pagerank_loop(graph: EdgeListGraph, packed: PackedGraph,
     def cond(state):
         return (state[3] > tol) & (state[4] < max_iter)
 
-    state0 = (jnp.pad(init_ranks.astype(jnp.float32), (0, v_pad - V)),
-              init_affected, init_affected,
-              jnp.asarray(jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32),
-              jnp.asarray(0, jnp.int64), jnp.asarray(0, jnp.int64))
+    def state0(init_ranks, init_affected):
+        return (jnp.pad(init_ranks.astype(jnp.float32), (0, v_pad - V)),
+                init_affected, init_affected,
+                jnp.asarray(jnp.inf, jnp.float32),
+                jnp.asarray(0, jnp.int32),
+                jnp.asarray(0, jnp.int64), jnp.asarray(0, jnp.int64))
+
+    return cond, body, state0
+
+
+@partial(jax.jit, static_argnames=("closed_form", "prune", "expand",
+                                   "max_iter", "use_kernel"))
+def kernel_pagerank_loop(graph: EdgeListGraph, packed: PackedGraph,
+                         init_ranks: jax.Array, init_affected: jax.Array, *,
+                         alpha: float = ALPHA, tol: float = 1e-7,
+                         frontier_tol: float = 1e-5, prune_tol: float = 1e-5,
+                         max_iter: int = 500, closed_form: bool = False,
+                         prune: bool = False, expand: bool = True,
+                         use_kernel: bool = True) -> KernelPRResult:
+    TRACE_COUNTS["kernel_pagerank_loop"] += 1          # trace-time only
+    V = graph.num_vertices
+    cond, body, state0 = _loop_setup(
+        graph, packed, alpha=alpha, tol=tol, frontier_tol=frontier_tol,
+        prune_tol=prune_tol, max_iter=max_iter, closed_form=closed_form,
+        prune=prune, expand=expand, use_kernel=use_kernel)
     ranks_pad, _, ever, delta, it, edges, verts = jax.lax.while_loop(
-        cond, body, state0)
+        cond, body, state0(init_ranks, init_affected))
     return KernelPRResult(ranks_pad[:V], it, delta, ever, edges, verts)
+
+
+@partial(jax.jit, static_argnames=("closed_form", "prune", "expand",
+                                   "max_iter", "use_kernel"))
+def _fused_update_loop(graph_new: EdgeListGraph, packed: PackedGraph,
+                       update, init_ranks: jax.Array,
+                       init_affected: jax.Array, *,
+                       alpha: float = ALPHA, tol: float = 1e-7,
+                       frontier_tol: float = 1e-5, prune_tol: float = 1e-5,
+                       max_iter: int = 500, closed_form: bool = False,
+                       prune: bool = False, expand: bool = True,
+                       use_kernel: bool = True):
+    """ONE device program: packed micro-batch maintenance + the whole
+    f32 loop, first sweep peeled so it fuses with the update pass.
+
+    Applies ``update`` to ``packed`` (inlining ``_apply_batch_packed``),
+    runs the first gated sweep on the freshly updated structure in the
+    same program, then enters the while_loop at iteration 1.  Returns
+    ``(new_packed, dropped, KernelPRResult)``; ``dropped`` is the spill
+    overflow count the host wrapper turns into the usual checked error.
+    Re-running after a repack is safe: the update's deletions are
+    already absent and its insertions already live, so maintenance
+    degenerates to a no-op and only the solve repeats.
+    """
+    TRACE_COUNTS["fused_update_loop"] += 1             # trace-time only
+    from repro.kernels.pagerank_spmv.update import _apply_batch_packed
+    new_packed, dropped = _apply_batch_packed(packed, update)
+    V = graph_new.num_vertices
+    cond, body, state0 = _loop_setup(
+        graph_new, new_packed, alpha=alpha, tol=tol,
+        frontier_tol=frontier_tol, prune_tol=prune_tol, max_iter=max_iter,
+        closed_form=closed_form, prune=prune, expand=expand,
+        use_kernel=use_kernel)
+    # cond(state0) is unconditionally true (delta=inf, it=0 < max_iter),
+    # so the peel preserves the plain loop's exact iteration sequence
+    state1 = body(state0(init_ranks, init_affected))
+    ranks_pad, _, ever, delta, it, edges, verts = jax.lax.while_loop(
+        cond, body, state1)
+    return new_packed, dropped, KernelPRResult(ranks_pad[:V], it, delta,
+                                               ever, edges, verts)
+
+
+def fused_hybrid_pagerank(graph_new: EdgeListGraph, packed: PackedGraph,
+                          update, init_ranks: jax.Array,
+                          init_affected: jax.Array, *,
+                          alpha: float = ALPHA, tol: float = pr.TOL,
+                          tol_f32: float = 1e-7,
+                          frontier_tol: float = pr.FRONTIER_TOL,
+                          prune_tol: float = pr.PRUNE_TOL,
+                          kernel_frontier_tol: float = 1e-5,
+                          kernel_prune_tol: float = 1e-5,
+                          max_iter: int = pr.MAX_ITER,
+                          closed_form: bool = False, prune: bool = False,
+                          expand: bool = True, polish: bool = True,
+                          use_kernel: bool = True):
+    """Fused serving step: ``(new_packed, PageRankResult)`` from one
+    device program for maintenance + the entire f32 phase (plus the
+    usual f64 polish program when ``polish=True``).
+
+    Spill/overlay exhaustion raises the same checked ``ValueError`` as
+    ``apply_batch_packed`` — the caller repacks at the pinned shapes and
+    re-invokes with the SAME update (idempotent, see _fused_update_loop).
+    """
+    new_packed, dropped, k = _fused_update_loop(
+        graph_new, packed, update, init_ranks, init_affected, alpha=alpha,
+        tol=tol_f32, frontier_tol=kernel_frontier_tol,
+        prune_tol=kernel_prune_tol, max_iter=max_iter,
+        closed_form=closed_form, prune=prune, expand=expand,
+        use_kernel=use_kernel)
+    n = int(dropped)
+    if n:
+        raise ValueError(
+            f"{n} insertions exceed spill capacity of their dst "
+            f"windows or the locator overlay; repack with pack_graph "
+            "/ raise spill_lanes_per_window or overlay_capacity "
+            "(capacity sizing: DESIGN.md §8)")
+    if not polish:
+        return new_packed, pr.PageRankResult(
+            k.ranks.astype(jnp.float64), k.iterations,
+            k.delta.astype(jnp.float64), k.affected_ever,
+            k.edges_processed, k.vertices_processed)
+    p = pr._pagerank_loop(graph_new, k.ranks.astype(jnp.float64),
+                          k.affected_ever, alpha=alpha, tol=tol,
+                          frontier_tol=frontier_tol, prune_tol=prune_tol,
+                          max_iter=max_iter, closed_form=closed_form,
+                          prune=prune, expand=expand)
+    return new_packed, pr.PageRankResult(
+        p.ranks, k.iterations + p.iterations, p.delta,
+        k.affected_ever | p.affected_ever,
+        k.edges_processed + p.edges_processed,
+        k.vertices_processed + p.vertices_processed)
 
 
 def hybrid_pagerank(graph: EdgeListGraph, packed: PackedGraph,

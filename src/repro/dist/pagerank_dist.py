@@ -386,6 +386,164 @@ def _get_sharded_loop(mesh, spec, *, alpha: float, tol: float,
     return fn
 
 
+def _get_halo_loop(mesh, spec, halo_h: int, *, alpha: float, tol: float,
+                   frontier_tol: float, prune_tol: float, max_iter: int,
+                   closed_form: bool, prune: bool, expand: bool,
+                   use_kernel: bool, wire: str):
+    """Boundary-only sharded loop: rank stays SHARD-RESIDENT and each
+    iteration exchanges just the halo table — O(boundary) wire, not O(V).
+
+    Replaces ``_get_sharded_loop``'s replicated-rank recipe (full-rank
+    ``psum`` every iteration) with the dist-engine exchange contract at
+    window granularity:
+
+      1. ONE ``[S, H, 2]`` psum per iteration carries every shard's
+         owned (rank/deg, above-tau_f flag) values for every halo slot —
+         each slot has exactly one owner, the rest contribute zeros, so
+         the sum reconstructs the table exactly.  ``wire="quantized"``
+         sends the {0,1} flags over the int8/s16 wire
+         (collectives.bool_or_psum, exact) and only the f32 ranks at
+         full width; ``wire="packed"`` rides both in f32 lanes.
+      2. Each shard scatters its row into a local full-width rsc/flag
+         buffer (own range + halo; all other slots are zero and by
+         construction unread: every src in the shard's lanes is either
+         owned or in its halo), runs the gated SpMV over its OWN windows
+         only, and updates its local rank slice in place.
+      3. Frontier expansion marks come from the shard's own packed lanes
+         (``valid & big[src]`` segment-max into local windows) — the
+         replicated ``graph.push_or`` is gone.  Like the XLA dist
+         engine, expansion marks are consumed ONE SWEEP LATER (the
+         ``[.., flag]`` lane carries the previous sweep's mask), which
+         only reassociates the affected-set union; the final sweep's
+         marks are folded in after the loop with one extra exchange.
+
+    The full rank vector is reassembled (out_spec ``P("model")`` concat)
+    only once, at convergence.
+    """
+    from repro.kernels.pagerank_spmv import shard as _sh
+
+    key = (mesh, spec, halo_h, wire, alpha, tol, frontier_tol, prune_tol,
+           max_iter, closed_form, prune, expand, use_kernel)
+    fn = _SHARDED_LOOPS.get(key)
+    if fn is not None:
+        return fn
+    S, wps, vb = spec.num_shards, spec.windows_per_shard, spec.vb
+    vps = spec.vertices_per_shard
+    v_pad = spec.padded_vertices
+    V = spec.num_vertices
+
+    def step(sharded, halo_ids, r_loc, inv_loc, aff_loc):
+        _sh.TRACE_COUNTS["sharded_kernel_loop"] += 1   # trace-time only
+        packed = _sh._local_packed(sharded, spec, index=0)
+        me = jax.lax.axis_index("model")
+        lo = me * vps
+        entry_edges = jnp.sum((packed.valid > 0), axis=1).astype(jnp.int64)
+        c0 = jnp.float32((1.0 - alpha) / V)
+        a32 = jnp.float32(alpha)
+        src_flat = packed.src.reshape(-1)
+        valid_flat = packed.valid.reshape(-1) > 0
+        dst_local = (packed.window[:, None] * vb
+                     + packed.dst_rel).reshape(-1)
+        owned = (halo_ids >= lo) & (halo_ids < lo + vps)      # [S, H]
+        lid = jnp.clip(halo_ids - lo, 0, vps - 1)
+
+        def exchange(rsc_loc, big_loc):
+            """halo table in, (rsc_full, big_full) local buffers out."""
+            vals = jnp.where(owned, rsc_loc[lid], 0.0)
+            fl = jnp.where(owned, big_loc[lid], False)
+            if wire == "quantized":
+                vals = jax.lax.psum(vals, "model")
+                fl = bool_or_psum(fl, "model")
+            else:
+                both = jax.lax.psum(
+                    jnp.stack([vals, fl.astype(jnp.float32)], axis=-1),
+                    "model")
+                vals, fl = both[..., 0], both[..., 1] > 0
+            my_ids = halo_ids[me]
+            rsc_full = jax.lax.dynamic_update_slice(
+                jnp.zeros((v_pad,), jnp.float32), rsc_loc, (lo,))
+            rsc_full = rsc_full.at[my_ids].set(vals[me], mode="drop")
+            big_full = jax.lax.dynamic_update_slice(
+                jnp.zeros((v_pad,), bool), big_loc, (lo,))
+            big_full = big_full.at[my_ids].set(fl[me], mode="drop")
+            return rsc_full, big_full
+
+        def marks_from(big_full):
+            hit = valid_flat & big_full[src_flat]
+            return jax.ops.segment_max(hit.astype(jnp.int32), dst_local,
+                                       num_segments=vps) > 0
+
+        def body(state):
+            r, base, big, ever, _, it, edges, verts = state
+            rsc_full, big_full = exchange(r * inv_loc, big)
+            aff = base | big
+            if expand:
+                aff = aff | marks_from(big_full)
+            active_l = jnp.any(aff.reshape(wps, vb), axis=1)
+            contrib_l = _sh.gated_contrib_shard(packed, rsc_full, active_l,
+                                                use_kernel=use_kernel)
+            if closed_form:
+                r_all = (c0 + a32 * contrib_l) / (1.0 - a32 * inv_loc)
+            else:
+                r_all = c0 + a32 * (contrib_l + r * inv_loc)
+            r_new = jnp.where(aff, r_all, r)
+            dr = jnp.abs(r_new - r)
+            rel = dr / jnp.maximum(jnp.maximum(r_new, r), 1e-30)
+            delta = jax.lax.pmax(jnp.max(jnp.where(aff, dr, 0.0)), "model")
+            new_base = aff
+            if prune:
+                new_base = new_base & ~(aff & (rel <= prune_tol))
+            new_big = (aff & (rel > frontier_tol)) if expand \
+                else jnp.zeros_like(aff)
+            edges = edges + jax.lax.psum(jnp.sum(
+                jnp.where(active_l[packed.window], entry_edges, 0)),
+                "model")
+            verts = verts + jax.lax.psum(
+                jnp.sum(active_l.astype(jnp.int64)) * vb, "model")
+            return (r_new, new_base, new_big, ever | aff, delta, it + 1,
+                    edges, verts)
+
+        def cond(state):
+            return (state[4] > tol) & (state[5] < max_iter)
+
+        state0 = (r_loc, aff_loc, jnp.zeros_like(aff_loc), aff_loc,
+                  jnp.asarray(jnp.inf, jnp.float32),
+                  jnp.asarray(0, jnp.int32),
+                  jnp.asarray(0, jnp.int64), jnp.asarray(0, jnp.int64))
+        r_out, _, big, ever, delta, it, edges, verts = jax.lax.while_loop(
+            cond, body, state0)
+        if expand:
+            # fold in the final sweep's unconsumed marks (one extra
+            # exchange), matching the XLA dist engine's full_result
+            _, big_full = exchange(r_out * inv_loc, big)
+            ever = ever | marks_from(big_full)
+        return r_out, it, delta, ever, edges, verts
+
+    fn = jax.jit(shard_map(
+        step, mesh=mesh,
+        in_specs=(P("model"), P(), P("model"), P("model"), P("model")),
+        out_specs=(P("model"), P(), P(), P("model"), P(), P()),
+        check_vma=False))
+    while len(_SHARDED_LOOPS) >= _SHARDED_LOOPS_MAX:
+        _SHARDED_LOOPS.pop(next(iter(_SHARDED_LOOPS)))
+    _SHARDED_LOOPS[key] = fn
+    return fn
+
+
+def halo_comm_bytes(halo, iterations: int, *, wire: str = "packed",
+                    expand: bool = True) -> int:
+    """Wire bytes of one solve's halo exchanges (per device): each
+    iteration moves the [S, H] rank lanes (f32) plus the flag lanes (f32
+    packed, or s16 over the quantized wire), and the final fold-in is
+    one more exchange.  Sublinear in V: proportional to S·H, the padded
+    boundary size."""
+    from repro.kernels.pagerank_spmv.shard import halo_slots
+
+    slots = halo_slots(halo)
+    per_iter = slots * (4 + (2 if wire == "quantized" else 4))
+    return (int(iterations) + (1 if expand else 0)) * per_iter
+
+
 def sharded_hybrid_pagerank(mesh, sharded, spec, graph, init_ranks,
                             init_affected, *, alpha: float = ALPHA,
                             tol: float = TOL, tol_f32: float = 1e-7,
@@ -396,27 +554,63 @@ def sharded_hybrid_pagerank(mesh, sharded, spec, graph, init_ranks,
                             max_iter: int = MAX_ITER,
                             closed_form: bool = False, prune: bool = False,
                             expand: bool = True, polish: bool = True,
-                            use_kernel: bool = False) -> pr.PageRankResult:
+                            use_kernel: bool = False, halo=None,
+                            wire: str = "packed",
+                            comm_info: Optional[dict] = None
+                            ) -> pr.PageRankResult:
     """The sharded precision ladder: f32 kernel iterations on the mesh to
     ``tol_f32``, then the f64 XLA polish on the default device seeded
     with the union of shard ``affected_ever`` masks — same fixed point
     and ``PageRankResult`` contract as ``core.kernel_engine
     .hybrid_pagerank`` and the f64 engine (L∞ ≤ 1e-6, DESIGN.md §8-§9).
+
+    ``halo`` (a ``shard.HaloSpec``) switches the f32 phase to the
+    boundary-only exchange loop — shard-resident ranks, per-iteration
+    wire ∝ halo size instead of V (``wire="quantized"`` compresses the
+    flag lanes over the int8/s16 wire; the f64 polish stays exact
+    either way).  ``comm_info`` (a dict, mutated) receives the solve's
+    ``comm_bytes`` / ``halo_slots`` / ``f32_iterations`` accounting.
     """
     import numpy as np
 
     V = spec.num_vertices
     v_pad = spec.padded_vertices
-    loop = _get_sharded_loop(mesh, spec, alpha=alpha, tol=tol_f32,
-                             frontier_tol=kernel_frontier_tol,
-                             prune_tol=kernel_prune_tol, max_iter=max_iter,
-                             closed_form=closed_form, prune=prune,
-                             expand=expand, use_kernel=use_kernel)
     deg = graph.out_degree(include_self_loop=True)
     inv_pad = jnp.pad((1.0 / deg).astype(jnp.float32), (0, v_pad - V))
     r_pad = jnp.pad(init_ranks.astype(jnp.float32), (0, v_pad - V))
-    r_out, it, delta, ever, edges, verts = loop(sharded, graph, r_pad,
-                                                inv_pad, init_affected)
+    if halo is not None:
+        loop = _get_halo_loop(mesh, spec, halo.ids.shape[1], alpha=alpha,
+                              tol=tol_f32,
+                              frontier_tol=kernel_frontier_tol,
+                              prune_tol=kernel_prune_tol,
+                              max_iter=max_iter, closed_form=closed_form,
+                              prune=prune, expand=expand,
+                              use_kernel=use_kernel, wire=wire)
+        aff_pad = jnp.pad(init_affected, (0, v_pad - V))
+        r_out, it, delta, ever, edges, verts = loop(
+            sharded, halo.ids, r_pad, inv_pad, aff_pad)
+        ever = ever[:V]
+        if comm_info is not None:
+            from repro.kernels.pagerank_spmv.shard import halo_slots
+            comm_info["f32_iterations"] = int(it)
+            comm_info["halo_slots"] = halo_slots(halo)
+            comm_info["comm_bytes"] = halo_comm_bytes(
+                halo, int(it), wire=wire, expand=expand)
+    else:
+        loop = _get_sharded_loop(mesh, spec, alpha=alpha, tol=tol_f32,
+                                 frontier_tol=kernel_frontier_tol,
+                                 prune_tol=kernel_prune_tol,
+                                 max_iter=max_iter, closed_form=closed_form,
+                                 prune=prune, expand=expand,
+                                 use_kernel=use_kernel)
+        r_out, it, delta, ever, edges, verts = loop(sharded, graph, r_pad,
+                                                    inv_pad, init_affected)
+        if comm_info is not None:
+            # replicated-rank recipe: one full-rank [v_pad] f32 psum per
+            # iteration on every device — the O(V) cost the halo removes
+            comm_info["f32_iterations"] = int(it)
+            comm_info["halo_slots"] = 0
+            comm_info["comm_bytes"] = int(it) * v_pad * 4
     # hop the replicated results off the mesh so the f64 polish runs as a
     # plain single-device jit (mixing committed mesh arrays into it would
     # be a device mismatch)
@@ -447,13 +641,15 @@ def sharded_kernel_pagerank(graph, init_ranks, init_affected, mesh, *,
     """One-shot ``engine="kernel"`` on a mesh: pack (unless the caller
     maintains the sharded structure incrementally — see
     ``ShardedKernelEngine``) and run the sharded hybrid ladder."""
-    from repro.kernels.pagerank_spmv.shard import pack_shards
+    from repro.kernels.pagerank_spmv.shard import build_halo, pack_shards
 
     if "model" not in mesh.axis_names:
         raise ValueError(f"mesh {mesh.axis_names} has no 'model' axis")
     if sharded is None:
         sharded, spec = pack_shards(graph, int(mesh.shape["model"]),
                                     **(pack_kw or {}))
+    if kw.pop("exchange", "halo") == "halo" and "halo" not in kw:
+        kw["halo"] = build_halo(sharded, spec)
     return sharded_hybrid_pagerank(mesh, sharded, spec, graph, init_ranks,
                                    init_affected, **kw)
 
@@ -472,15 +668,30 @@ class ShardedKernelEngine:
     overflowing it, a window's spill lanes or the locator overlay raises
     ``ShardCapacityError`` naming the shards, which stream owners resolve
     by ``repack`` (the serve engine counts these per shard).
+
+    ``exchange="halo"`` (the default) keeps ranks shard-resident and
+    exchanges only the cross-shard boundary each f32 iteration: the halo
+    table is built at bootstrap, extended on-device as routed insertions
+    land (capacity-checked like every other structure; a repack rebuilds
+    it exactly, shedding deletion-stale slots), and its pinned capacity
+    keeps the compiled loop's shapes static.  ``exchange="psum"`` is the
+    replicated-rank full-psum recipe (the PR-5 baseline, kept for
+    differentials).  After each solve, ``last_comm_info`` /
+    ``last_comm_bytes`` expose the per-solve wire accounting.
     """
 
     def __init__(self, mesh, graph, *, pack_kw=None, delta_budget=None,
-                 use_kernel: bool = False, **loop_kw):
-        from repro.kernels.pagerank_spmv.shard import (build_sharded_apply,
+                 use_kernel: bool = False, exchange: str = "halo",
+                 wire: str = "packed", halo_capacity=None, **loop_kw):
+        from repro.kernels.pagerank_spmv.shard import (build_halo,
+                                                       build_sharded_apply,
                                                        pack_shards)
 
         if "model" not in mesh.axis_names:
             raise ValueError(f"mesh {mesh.axis_names} has no 'model' axis")
+        if exchange not in ("halo", "psum"):
+            raise ValueError(f"exchange must be 'halo' or 'psum', "
+                             f"got {exchange!r}")
         self.mesh = mesh
         self.num_shards = int(mesh.shape["model"])
         pack_kw = dict(pack_kw or {})
@@ -497,16 +708,27 @@ class ShardedKernelEngine:
         self._pack_kw = pack_kw
         self.delta_budget = delta_budget
         self.use_kernel = use_kernel
+        self.exchange = exchange
+        self.wire = wire
+        self.halo = None
+        if exchange == "halo":
+            self.halo = build_halo(self.sharded, self.spec,
+                                   capacity=halo_capacity)
+            self._halo_capacity = int(self.halo.ids.shape[1])
+        self.last_comm_info: dict = {}
+        self.last_comm_bytes = 0
         self.loop_kw = loop_kw
         self._apply = build_sharded_apply(mesh, self.spec)
 
     def apply_update(self, update):
-        """Route Δ to its owning shards and apply under shard_map.
-        Raises ``ShardCapacityError`` (budget/spill/overlay) unchanged —
-        the structure is only replaced on success."""
+        """Route Δ to its owning shards, apply under shard_map, extend
+        the halo with any inserted boundary srcs.  Raises
+        ``ShardCapacityError`` (budget/spill/overlay/halo) unchanged —
+        the structures are only replaced on success, atomically."""
         import numpy as np
 
         from repro.kernels.pagerank_spmv.shard import (ShardCapacityError,
+                                                       extend_halo,
                                                        route_update)
 
         routed = route_update(update, self.spec,
@@ -521,14 +743,23 @@ class ShardedKernelEngine:
                 f"their dst windows or the locator overlay on shards "
                 f"{bad}; repack with pack_shards (capacity sizing: "
                 "DESIGN.md §8-§9)", shards=bad)
+        new_halo = None
+        if self.halo is not None:
+            new_halo = extend_halo(self.halo, routed, self.spec)
         self.sharded = new
+        if new_halo is not None:
+            self.halo = new_halo
 
     def repack(self, graph):
         """Rebuild the sharded pack from ``graph`` at the pinned shapes,
         degrading the spill guarantee to the sharded minimum (1 lane) if
         regrown windows no longer fit it — same recovery contract as the
-        single-pod serve path."""
-        from repro.kernels.pagerank_spmv.shard import pack_shards
+        single-pod serve path.  The halo is rebuilt exactly (stale slots
+        dropped); if the boundary outgrew its pinned capacity the table
+        grows, costing the one loop recompile the growth forces."""
+        from repro.kernels.pagerank_spmv.shard import (ShardCapacityError,
+                                                       build_halo,
+                                                       pack_shards)
 
         try:
             sharded, spec = pack_shards(graph, self.num_shards,
@@ -540,10 +771,21 @@ class ShardedKernelEngine:
         spec = spec._replace(max_entries_per_window=self.spec.num_entries)
         assert spec == self.spec, "repack changed pinned statics"
         self.sharded = sharded
+        if self.halo is not None:
+            try:
+                self.halo = build_halo(self.sharded, self.spec,
+                                       capacity=self._halo_capacity)
+            except ShardCapacityError:
+                self.halo = build_halo(self.sharded, self.spec)
+                self._halo_capacity = int(self.halo.ids.shape[1])
 
     def solve(self, graph, init_ranks, init_affected,
               **flags) -> pr.PageRankResult:
-        return sharded_hybrid_pagerank(
+        self.last_comm_info = {}
+        res = sharded_hybrid_pagerank(
             self.mesh, self.sharded, self.spec, graph, init_ranks,
-            init_affected, use_kernel=self.use_kernel,
+            init_affected, use_kernel=self.use_kernel, halo=self.halo,
+            wire=self.wire, comm_info=self.last_comm_info,
             **{**self.loop_kw, **flags})
+        self.last_comm_bytes = self.last_comm_info.get("comm_bytes", 0)
+        return res

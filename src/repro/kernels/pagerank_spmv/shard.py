@@ -57,11 +57,11 @@ from repro.kernels.pagerank_spmv.pagerank_spmv import (
 from repro.kernels.pagerank_spmv.ref import frontier_spmv_ref_padded
 from repro.kernels.pagerank_spmv.update import _apply_batch_packed
 
-__all__ = ["ShardSpec", "ShardedPacked", "ShardCapacityError",
+__all__ = ["ShardSpec", "ShardedPacked", "ShardCapacityError", "HaloSpec",
            "pack_shards", "route_update", "build_sharded_apply",
            "apply_batch_sharded_host", "frontier_spmv_shard",
            "gated_contrib_shard", "shard_graph", "sharded_edge_set",
-           "TRACE_COUNTS"]
+           "build_halo", "extend_halo", "halo_slots", "TRACE_COUNTS"]
 
 # retracing telemetry for the sharded path (same contract as
 # kernels.pagerank_spmv.update.TRACE_COUNTS): one compiled route, one
@@ -418,3 +418,129 @@ def gated_contrib_shard(packed: PackedGraph, rsc_full: jax.Array,
     return frontier_spmv_ref_padded(packed.src, packed.dst_rel,
                                     packed.valid, packed.window, rsc_full,
                                     active_window, packed.vb)
+
+
+# ---------------------------------------------------------------------------
+# halo: the cross-shard source boundary (dist boundary-only exchange)
+# ---------------------------------------------------------------------------
+
+class HaloSpec(NamedTuple):
+    """Each shard's boundary-in set: the global src vertices whose rank
+    the shard must RECEIVE each iteration because they feed its dst
+    windows but live on another shard.
+
+    ``ids[s]`` holds shard s's halo as an int32 row of capacity H; live
+    entries occupy the ``count[s]``-long prefix, the tail is the
+    out-of-range sentinel ``S·vps`` (scatters with ``mode="drop"``
+    ignore it, the ownership test inside the exchange zeroes it).  The
+    table is small — Σ|halo| is the number of distinct cut srcs, the
+    graph's edge-cut boundary — and replicated on every device, which is
+    what turns the per-iteration full-rank ``psum`` (O(V) wire) into one
+    ``[S, H]`` exchange (O(boundary) wire).  Deletions leave stale
+    entries behind (a few extra exchanged floats, never wrong values);
+    repacks rebuild the table exactly.
+    """
+
+    ids: jax.Array      # int32[S, H] global src ids, sentinel-padded
+    count: jax.Array    # int32[S] live prefix length
+
+
+def halo_slots(halo: HaloSpec) -> int:
+    """Total exchanged slots per iteration (the comm-volume unit)."""
+    return int(halo.ids.shape[0] * halo.ids.shape[1])
+
+
+def build_halo(sharded: ShardedPacked, spec: ShardSpec, *,
+               capacity: int | None = None,
+               min_capacity: int = 8) -> HaloSpec:
+    """Host-side halo construction from the live sharded pack.
+
+    Per shard: the unique live srcs outside its own vertex range.
+    ``capacity`` pins H (streaming repacks must keep the compiled loop's
+    shapes); by default H is the widest shard's halo plus 25% + 64 slots
+    of insert headroom, rounded to a multiple of 64.  A pinned capacity
+    smaller than a shard's rebuilt halo is a ``ShardCapacityError``.
+    """
+    vps = spec.vertices_per_shard
+    rows = []
+    for s in range(spec.num_shards):
+        src = np.asarray(sharded.src[s]).reshape(-1)
+        live = np.asarray(sharded.valid[s]).reshape(-1) > 0
+        remote = np.unique(src[live & ((src < s * vps)
+                                       | (src >= (s + 1) * vps))])
+        rows.append(remote.astype(np.int32))
+    widest = max((len(r) for r in rows), default=0)
+    if capacity is None:
+        capacity = max(min_capacity, -(-int(widest * 1.25 + 64) // 64) * 64)
+    elif widest > capacity:
+        bad = tuple(s for s, r in enumerate(rows) if len(r) > capacity)
+        raise ShardCapacityError(
+            f"shard halo of {widest} srcs exceeds the pinned halo "
+            f"capacity {capacity} on shards {bad}; grow the halo "
+            "(comm-volume model: DESIGN.md §10)", shards=bad)
+    sentinel = spec.padded_vertices
+    ids = np.full((spec.num_shards, capacity), sentinel, np.int32)
+    for s, r in enumerate(rows):
+        ids[s, : len(r)] = r
+    return HaloSpec(ids=jnp.asarray(ids),
+                    count=jnp.asarray([len(r) for r in rows], jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("vps",))
+def _extend_halo(ids: jax.Array, count: jax.Array, ins_src: jax.Array,
+                 ins_mask: jax.Array, vps: int):
+    """Append each routed insertion's src to its shard's halo row.
+
+    ``ins_src``/``ins_mask`` are ``route_update``'s [S, B] per-shard
+    views (replicated host arrays, NOT under shard_map), so every row
+    extends independently via vmap.  Skips own-range srcs and srcs
+    already present; in-batch duplicates collapse to their first
+    occurrence (same argsort scheme as the packed-lane update).  Returns
+    ``(ids, count, dropped[S])`` — dropped > 0 means the pinned capacity
+    overflowed and the caller repacks/regrows.
+    """
+    TRACE_COUNTS["extend_halo"] += 1                   # trace-time only
+    S, H = ids.shape
+
+    def row(s, row_ids, row_count, srcs, mask):
+        cand = mask & ((srcs < s * vps) | (srcs >= (s + 1) * vps))
+        present = jnp.any(srcs[:, None] == row_ids[None, :], axis=1)
+        keep = cand & ~present
+        key = jnp.where(keep, srcs, -1)
+        sorted_key = jnp.sort(key)
+        first = jnp.concatenate(
+            [jnp.array([True]), sorted_key[1:] != sorted_key[:-1]])
+        order = jnp.argsort(key)
+        keep = keep & jnp.zeros_like(keep).at[order].set(
+            first & (sorted_key >= 0))
+        pos = row_count + jnp.cumsum(keep.astype(jnp.int32)) - 1
+        ok = keep & (pos < H)
+        slot = jnp.where(ok, pos, H)
+        return (row_ids.at[slot].set(srcs, mode="drop"),
+                (row_count
+                 + jnp.sum(ok.astype(jnp.int32))).astype(jnp.int32),
+                jnp.sum((keep & ~ok).astype(jnp.int32)))
+
+    sids = jnp.arange(S, dtype=jnp.int32)
+    return jax.vmap(row)(sids, ids, count, ins_src, ins_mask)
+
+
+def extend_halo(halo: HaloSpec, routed: BatchUpdate, spec: ShardSpec, *,
+                check: bool = True) -> HaloSpec:
+    """Halo maintenance for one routed micro-batch (insertions only —
+    deletions just leave stale slots).  Capacity overflow is the usual
+    checked ``ShardCapacityError``; the stream owner repacks, which
+    rebuilds the halo exactly (dropping any stale slots too)."""
+    ids, count, dropped = _extend_halo(halo.ids, halo.count,
+                                       routed.ins_src, routed.ins_mask,
+                                       spec.vertices_per_shard)
+    if check:
+        d = np.asarray(dropped)
+        if d.sum():
+            bad = tuple(int(s) for s in np.flatnonzero(d))
+            raise ShardCapacityError(
+                f"{int(d.sum())} inserted boundary srcs exceed the halo "
+                f"capacity {halo.ids.shape[1]} on shards {bad}; repack "
+                "with a larger halo (comm model: DESIGN.md §10)",
+                shards=bad)
+    return HaloSpec(ids=ids, count=count)

@@ -124,6 +124,14 @@ def main(argv=None):
         engine.bootstrap(ranks=restored[0], last_seq=start_event - 1)
     else:
         engine.bootstrap()
+    if engine.kernel_geometry is not None:
+        info = engine.tune_info
+        how = (f"{info.source}"
+               f"{' (cache hit)' if info.cache_hit else ''} "
+               f"key={info.key} in {info.tune_time_s * 1e3:.1f}ms"
+               if info is not None else "explicit (tuning off)")
+        print(f"kernel geometry: {engine.kernel_geometry.describe()} "
+              f"via {how}")
     client = QueryClient(store, ingest, metrics)
     rng = np.random.default_rng(args.seed)
 

@@ -131,6 +131,70 @@ def pagerank_model_flops(spec, cell) -> float:
     return 2.0 * d["edge_capacity"] + 5.0 * d["n_vertices"]
 
 
+# ---------------------------------------------------------------------------
+# gated-SpMV geometry model (consumed by kernels.pagerank_spmv.tune)
+# ---------------------------------------------------------------------------
+
+# fixed cost of one grid step of the frontier-gated SpMV beyond its MXU
+# contraction: DMA issue, scalar-prefetch reads, revisit bookkeeping.  The
+# grid is STATIC (= total entries) — excess steps stay VMEM-resident but
+# still run the one-hot matmul with a zeroed payload, so per-step cost is
+# paid for every entry, active or not.
+SPMV_STEP_OVERHEAD_S = 1e-6
+
+# random-access HBM traffic moves whole sectors regardless of element
+# width: a gather/scatter of one f64 still transfers a 32B sector.  The
+# dense XLA engine pays this on every edge (gather r/d by src, scatter-
+# add by dst); the packed kernel streams contiguous lanes at element
+# width — that gap, not FLOPs, is the kernel path's headroom.
+GATHER_SECTOR_BYTES = 32
+
+
+def dense_spmv_iteration_cost(*, num_edges: int, num_vertices: int,
+                              index_bytes: float = 8.0,
+                              value_bytes: float = 8.0,
+                              hbm_bw: float = HBM_BW) -> dict:
+    """Roofline terms for ONE dense XLA segment-sum PageRank iteration
+    (the f64 engine's step): per edge, a random gather of the source
+    contribution (one sector), the scatter-add's read+write (two
+    sectors) and the sequential src/dst index stream; per vertex, ~6
+    streamed f64 vectors (old/new ranks, inverse degree, frontier/prune
+    masks, delta).  All traffic is charged at streaming bandwidth —
+    sector inflation already accounts for the random-access penalty."""
+    edge_bytes = num_edges * (3.0 * GATHER_SECTOR_BYTES + index_bytes)
+    vertex_bytes = num_vertices * value_bytes * 6.0
+    memory_s = (edge_bytes + vertex_bytes) / hbm_bw
+    return dict(memory_s=memory_s, edge_bytes=edge_bytes,
+                vertex_bytes=vertex_bytes, total_s=memory_s)
+
+
+def gated_spmv_iteration_cost(*, total_entries: int, active_entries: float,
+                              active_windows: float, be: int, vb: int,
+                              v_rsc: int, peak_flops: float = PEAK_FLOPS,
+                              hbm_bw: float = HBM_BW) -> dict:
+    """Roofline terms for ONE gated-SpMV iteration at a given geometry.
+
+    The asymmetry that makes geometry worth tuning: **memory traffic is
+    gated** (only active entries are DMA'd from HBM; the replicated rsc
+    block and the active output windows ride along), but **compute is
+    not** — the grid is static at ``total_entries`` steps and every step
+    runs the ``[1,BE]@[BE,VB]`` one-hot contraction (inactive steps with
+    a zeroed payload).  Large BE trims total entries (fewer wasted MXU
+    steps + less per-step overhead); small VB sharpens window gating
+    (fewer bytes per active frontier vertex) but multiplies the window
+    count and hence the entry count.  The tuner ranks candidate
+    geometries by ``total_s = max(compute_s, memory_s)``.
+    """
+    lane_bytes = active_entries * be * (4 + 4 + 4)      # src, dst_rel, valid
+    out_bytes = active_windows * vb * 4.0
+    rsc_bytes = float(v_rsc) * 4.0
+    memory_s = (lane_bytes + out_bytes + rsc_bytes) / hbm_bw
+    compute_s = total_entries * (2.0 * be * vb / peak_flops
+                                 + SPMV_STEP_OVERHEAD_S)
+    return dict(compute_s=compute_s, memory_s=memory_s,
+                total_s=max(compute_s, memory_s))
+
+
 def model_flops(spec, cell) -> float:
     return dict(lm=lm_model_flops, gnn=gnn_model_flops,
                 recsys=recsys_model_flops,

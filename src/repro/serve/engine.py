@@ -49,7 +49,16 @@ single-pod path.
 ``spill_lanes_per_window``, ``num_entries``), ``use_kernel`` (True =
 Pallas kernel [interpret mode off-TPU], False = jnp oracle, "auto" =
 kernel on TPU only) and any ``hybrid_pagerank`` kwarg (``tol_f32``,
-``polish``, ...).
+``polish``, ...).  When the caller does NOT fix ``be``/``vb``, bootstrap
+**autotunes** the pack geometry for the bootstrap graph via
+``kernels.pagerank_spmv.tune`` (roofline model over the graph's degree
+distribution, optional first-batch measured search, persistent cache
+keyed by graph shape + device kind); the winner is exposed as
+``self.kernel_geometry`` / ``self.tune_info`` for the launch log.
+``kernel_opts["tune"]=False`` opts out (fixed ``KERNEL_PACK_DEFAULTS``),
+``tune_measure=True`` enables the timed candidate search,
+``tune_cache_path`` overrides the cache file, ``frontier_frac`` is the
+expected per-batch affected fraction the model optimises for.
 
 ``ppr_index=`` (an ``repro.ppr.IndexConfig`` or prebuilt ``WalkIndex``)
 opts the engine into maintaining a random-walk PPR index alongside the
@@ -106,9 +115,16 @@ class ServeEngine:
         self.mesh = mesh
         self.engine = engine
         opts = dict(kernel_opts or {})
-        self._pack_kw = {**KERNEL_PACK_DEFAULTS,
-                         **{k: opts.pop(k) for k in _PACK_KEYS
-                            if k in opts}}
+        explicit = {k: opts.pop(k) for k in _PACK_KEYS if k in opts}
+        # autotune unless the caller fixed the geometry (be/vb) themselves
+        self._tune = opts.pop("tune", not ({"be", "vb"} & set(explicit)))
+        self._tune_measure = opts.pop("tune_measure", False)
+        self._tune_cache_path = opts.pop("tune_cache_path", None)
+        self._frontier_frac = opts.pop("frontier_frac", 0.05)
+        self._explicit_pack = explicit
+        self._pack_kw = {**KERNEL_PACK_DEFAULTS, **explicit}
+        self.kernel_geometry = None   # set at bootstrap (kernel engine)
+        self.tune_info = None
         self._delta_budget = opts.pop("delta_budget", None)
         use_kernel = opts.pop("use_kernel", "auto")
         if use_kernel == "auto":
@@ -143,6 +159,23 @@ class ServeEngine:
         reproduces the index bit-identically from the replayed graph."""
         if ranks is None:
             ranks = self._solve("static", self._graph, None, None).ranks
+        if self.engine == "kernel" and self.kernel_geometry is None:
+            from repro.kernels.pagerank_spmv.tune import KernelGeometry, \
+                tune_geometry
+            if self._tune:
+                geom, self.tune_info = tune_geometry(
+                    self._graph, frontier_frac=self._frontier_frac,
+                    expected_inserts=max(1024, 64 * self.ingest.capacity),
+                    measure=self._tune_measure,
+                    use_kernel=self._kernel_kw.get("use_kernel"),
+                    cache_path=self._tune_cache_path)
+                # caller-fixed keys still win over the tuned geometry
+                self._pack_kw = {**self._pack_kw, **geom.pack_kw(),
+                                 **self._explicit_pack}
+            self.kernel_geometry = KernelGeometry(
+                be=self._pack_kw["be"], vb=self._pack_kw["vb"],
+                spill_lanes_per_window=self._pack_kw[
+                    "spill_lanes_per_window"])
         if self.engine == "kernel" and self.mesh is not None \
                 and self._sharded is None:
             from repro.dist.pagerank_dist import ShardedKernelEngine
@@ -204,28 +237,6 @@ class ServeEngine:
             return False
         t0 = self._clock()
         graph_new = apply_batch(self._graph, batch.update)
-        if self._sharded is not None:
-            from repro.kernels.pagerank_spmv.shard import ShardCapacityError
-            try:
-                self._sharded.apply_update(batch.update)
-            except ShardCapacityError as e:
-                # budget/spill/overlay exhaustion on some shard(s):
-                # repack every shard at the pinned shapes (defragments
-                # freed lanes back into window order, zero recompiles).
-                # Only the typed capacity error means "recoverable by
-                # repack" — anything else is a real bug and propagates.
-                self._sharded.repack(graph_new)
-                self.metrics.record_packed_rebuild(shards=e.shards)
-        elif self._packed is not None:
-            from repro.kernels.pagerank_spmv.update import \
-                apply_batch_packed
-            try:
-                self._packed = apply_batch_packed(self._packed, batch.update)
-            except ValueError:
-                # spill/overlay exhaustion: repack at the pinned shapes,
-                # which also defragments freed lanes back into window order
-                self._packed = self._repack(graph_new)
-                self.metrics.record_packed_rebuild()
         method = self.method
         init_state = build_initial_state(self._graph, graph_new,
                                          batch.update, self._ranks, method)
@@ -238,8 +249,63 @@ class ServeEngine:
                 init_state = build_initial_state(
                     self._graph, graph_new, batch.update, self._ranks,
                     "static")
-        res = self._solve(method, graph_new, batch.update, self._ranks,
-                          graph_prev=self._graph, init_state=init_state)
+        # the fused path folds packed maintenance into the solve's first
+        # sweep — one device program for the whole f32 phase
+        fuse = (self._packed is not None and not fallback
+                and method in DYNAMIC_METHODS)
+        programs = 0
+        if self._sharded is not None:
+            from repro.kernels.pagerank_spmv.shard import ShardCapacityError
+            try:
+                self._sharded.apply_update(batch.update)
+                programs += 1
+            except ShardCapacityError as e:
+                # budget/spill/overlay exhaustion on some shard(s):
+                # repack every shard at the pinned shapes (defragments
+                # freed lanes back into window order, zero recompiles).
+                # Only the typed capacity error means "recoverable by
+                # repack" — anything else is a real bug and propagates.
+                self._sharded.repack(graph_new)
+                self.metrics.record_packed_rebuild(shards=e.shards)
+        elif self._packed is not None and not fuse:
+            from repro.kernels.pagerank_spmv.update import \
+                apply_batch_packed
+            try:
+                self._packed = apply_batch_packed(self._packed, batch.update)
+                programs += 1
+            except ValueError:
+                # spill/overlay exhaustion: repack at the pinned shapes,
+                # which also defragments freed lanes back into window order
+                self._packed = self._repack(graph_new)
+                self.metrics.record_packed_rebuild()
+        if fuse:
+            from repro.core.kernel_engine import fused_hybrid_pagerank
+            kw = dict(KERNEL_FLAGS[method], **self._kernel_kw, **self.pr_kw)
+            try:
+                self._packed, res = fused_hybrid_pagerank(
+                    graph_new, self._packed, batch.update, *init_state,
+                    **kw)
+            except ValueError:
+                # overflow surfaced inside the fused program: repack at
+                # the pinned shapes and re-run with the SAME update —
+                # maintenance is idempotent after the repack (deletions
+                # already absent, insertions already live), so only the
+                # solve repeats
+                self._packed = self._repack(graph_new)
+                self.metrics.record_packed_rebuild()
+                self._packed, res = fused_hybrid_pagerank(
+                    graph_new, self._packed, batch.update, *init_state,
+                    **kw)
+            programs += 1 + (1 if kw.get("polish", True) else 0)
+        else:
+            res = self._solve(method, graph_new, batch.update, self._ranks,
+                              graph_prev=self._graph, init_state=init_state)
+            if self.engine == "kernel" and self.mesh is None \
+                    and method in DYNAMIC_METHODS:
+                programs += 1 + (1 if self._kernel_kw.get("polish", True)
+                                 else 0)
+            else:
+                programs += 1   # one XLA solve (mesh paths count theirs)
         resampled = 0
         if self._ppr is not None:
             # the same touched signal that seeds the DF frontier drives
@@ -257,13 +323,17 @@ class ServeEngine:
         self._graph, self._ranks = graph_new, res.ranks
         self.store.publish(graph_new, res.ranks, batch.last_seq,
                            ppr_index=self._ppr)
+        comm = 0
+        if self._sharded is not None:
+            comm = int(getattr(self._sharded, "last_comm_bytes", 0))
         self.metrics.record_batch(
             latency, batch.num_events, batch.num_coalesced,
             affected=int(jnp.sum(res.affected_ever)),
             iterations=int(res.iterations), fallback=fallback,
             walks_resampled=resampled,
             edges_processed=int(res.edges_processed),
-            vertices_processed=int(res.vertices_processed))
+            vertices_processed=int(res.vertices_processed),
+            comm_bytes=comm, device_programs=programs)
         return True
 
     def _repack(self, graph: EdgeListGraph):

@@ -21,6 +21,12 @@ CLI report:
   * ``packed_rebuilds`` (+ ``packed_rebuilds_by_shard`` on the sharded
     kernel path) — spill/overlay/budget overflow repacks, attributed to
     the shards that overflowed;
+  * ``comm_bytes`` — per-iteration cross-shard wire traffic summed over
+    all batches (halo exchange on the sharded kernel path; 0 single-pod)
+    — the observable the boundary-exchange win shows up in;
+  * ``device_programs_per_batch`` — compiled maintenance+solve programs
+    launched per micro-batch (the fused update+sweep path is 1 per f32
+    phase vs 2 unfused, +1 when the f64 polish runs);
   * admission/fallback/coalescing counters.
 """
 from __future__ import annotations
@@ -52,6 +58,8 @@ class ServeMetrics:
         self.packed_rebuilds_by_shard: Counter = Counter()
         self.edges_processed = 0
         self.vertices_processed = 0
+        self.comm_bytes = 0
+        self.batch_device_programs: List[int] = []
         self._t_first_batch = None
         self._t_last_batch = None
         # queries
@@ -71,7 +79,8 @@ class ServeMetrics:
     def record_batch(self, latency_s: float, num_events: int,
                      num_coalesced: int, affected: int, iterations: int,
                      fallback: bool, walks_resampled: int = 0,
-                     edges_processed: int = 0, vertices_processed: int = 0):
+                     edges_processed: int = 0, vertices_processed: int = 0,
+                     comm_bytes: int = 0, device_programs: int = 0):
         now = self._clock()
         if self._t_first_batch is None:
             self._t_first_batch = now
@@ -85,6 +94,8 @@ class ServeMetrics:
         self.walks_resampled += int(walks_resampled)
         self.edges_processed += int(edges_processed)
         self.vertices_processed += int(vertices_processed)
+        self.comm_bytes += int(comm_bytes)
+        self.batch_device_programs.append(int(device_programs))
         if fallback:
             self.static_fallbacks += 1
 
@@ -124,6 +135,10 @@ class ServeMetrics:
             walks_resampled=self.walks_resampled,
             edges_processed=self.edges_processed,
             vertices_processed=self.vertices_processed,
+            comm_bytes=self.comm_bytes,
+            device_programs_per_batch=(
+                float(np.mean(self.batch_device_programs))
+                if self.batch_device_programs else 0.0),
             packed_rebuilds=self.packed_rebuilds,
             packed_rebuilds_by_shard={
                 str(k): v

@@ -1,0 +1,146 @@
+"""Fused update+sweep: the serving step's maintenance + f32 loop as ONE
+device program must be bitwise identical to the two-program path, must
+compile once over a stream, and the ServeEngine must account exactly one
+f32 program (+polish) per micro-batch."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.core import pagerank as pr
+from repro.core.kernel_engine import (TRACE_COUNTS as LOOP_TRACES,
+                                      fused_hybrid_pagerank,
+                                      hybrid_pagerank)
+from repro.graph.dynamic import (apply_batch, make_batch_update,
+                                 touched_vertices_mask)
+from repro.graph.structure import from_coo
+from repro.kernels.pagerank_spmv.update import (TRACE_COUNTS as UPD_TRACES,
+                                                apply_batch_packed,
+                                                pack_graph)
+from repro.serve import IngestQueue, RankStore, ServeEngine
+
+N = 48
+_PACK = dict(be=32, vb=16, spill_lanes_per_window=64)
+_FLAGS = dict(closed_form=True, prune=True, expand=True, use_kernel=False)
+
+
+def _stream(seed, steps=6, n=N, m=130):
+    rng = np.random.default_rng(seed)
+    init = np.unique(rng.integers(0, n, size=(m, 2)), axis=0)
+    init = init[init[:, 0] != init[:, 1]]
+    g = from_coo(init[:, 0], init[:, 1], n, edge_capacity=len(init) + 256)
+    batches = []
+    for _ in range(steps):
+        dels = rng.integers(0, n, size=(3, 2))
+        ins = rng.integers(0, n, size=(6, 2))
+        batches.append(make_batch_update(dels[dels[:, 0] != dels[:, 1]],
+                                         ins[ins[:, 0] != ins[:, 1]],
+                                         8, 16))
+    return g, batches
+
+
+def _assert_packed_equal(a, b):
+    import dataclasses
+    for name in (f.name for f in dataclasses.fields(a)):
+        x, y = getattr(a, name), getattr(b, name)
+        if hasattr(x, "shape"):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), name
+        else:
+            assert x == y, name
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity vs the two-program path, across a mixed stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 3])
+@pytest.mark.parametrize("polish", [True, False])
+def test_fused_bitwise_matches_two_program_path(seed, polish):
+    g, batches = _stream(seed)
+    packed2 = packed1 = pack_graph(g, **_PACK)
+    r2 = r1 = pr.static_pagerank(g).ranks
+
+    for i, upd in enumerate(batches):
+        g_new = apply_batch(g, upd)
+        aff = pr.initial_affected(g, g_new, touched_vertices_mask(upd, N))
+
+        # two programs: maintenance, then the loop
+        packed2 = apply_batch_packed(packed2, upd)
+        res2 = hybrid_pagerank(g_new, packed2, r2, aff, polish=polish,
+                               **_FLAGS)
+        # one program: fused maintenance + peeled first sweep + loop
+        packed1, res1 = fused_hybrid_pagerank(g_new, packed1, upd, r1, aff,
+                                              polish=polish, **_FLAGS)
+
+        _assert_packed_equal(packed1, packed2)
+        assert np.array_equal(np.asarray(res1.ranks),
+                              np.asarray(res2.ranks)), i    # bitwise
+        assert int(res1.iterations) == int(res2.iterations)
+        assert int(res1.edges_processed) == int(res2.edges_processed)
+        assert int(res1.vertices_processed) == int(res2.vertices_processed)
+        assert np.array_equal(np.asarray(res1.affected_ever),
+                              np.asarray(res2.affected_ever))
+        g, r1, r2 = g_new, res1.ranks, res2.ranks
+
+
+def test_fused_rerun_after_repack_is_idempotent():
+    # overflow recovery re-invokes the SAME fused call on the repacked
+    # structure: the update is already applied, so maintenance must
+    # degenerate to a no-op and the solve must repeat exactly
+    g, batches = _stream(7, steps=1)
+    packed = pack_graph(g, **_PACK)
+    ranks = pr.static_pagerank(g).ranks
+    upd = batches[0]
+    g_new = apply_batch(g, upd)
+    aff = pr.initial_affected(g, g_new, touched_vertices_mask(upd, N))
+    p1, res1 = fused_hybrid_pagerank(g_new, packed, upd, ranks, aff,
+                                     **_FLAGS)
+    p2, res2 = fused_hybrid_pagerank(g_new, p1, upd, ranks, aff, **_FLAGS)
+    _assert_packed_equal(p1, p2)
+    assert np.array_equal(np.asarray(res1.ranks), np.asarray(res2.ranks))
+
+
+# ---------------------------------------------------------------------------
+# serve path: one f32 program per micro-batch, compiled once
+# ---------------------------------------------------------------------------
+
+def test_serve_step_launches_one_fused_program_per_batch():
+    g, batches = _stream(11, steps=8)
+    ingest = IngestQueue(flush_size=64, flush_interval=1e9,
+                         max_pending=4096)
+    eng = ServeEngine(g, ingest, RankStore(), method="frontier",
+                      engine="kernel", kernel_opts=dict(**_PACK,
+                                                        use_kernel=False))
+    eng.bootstrap()
+
+    def one(upd):
+        dm, im = np.asarray(upd.del_mask), np.asarray(upd.ins_mask)
+        for u, v in zip(np.asarray(upd.del_src)[dm],
+                        np.asarray(upd.del_dst)[dm]):
+            ingest.submit_delete(int(u), int(v))
+        for u, v in zip(np.asarray(upd.ins_src)[im],
+                        np.asarray(upd.ins_dst)[im]):
+            ingest.submit_insert(int(u), int(v))
+        eng.step(force=True)
+
+    one(batches[0])                         # compiles the fused program
+    before = {k: LOOP_TRACES[k] for k in ("fused_update_loop",
+                                          "kernel_pagerank_loop")}
+    upd_before = UPD_TRACES["apply_batch_packed"]
+    n0 = len(eng.metrics.batch_device_programs)
+    for upd in batches[1:]:
+        one(upd)
+
+    # the stream rides the ONE already-compiled fused program: no
+    # retrace of it, and the standalone maintenance / loop programs are
+    # never even traced on the serving path
+    assert LOOP_TRACES["fused_update_loop"] == before["fused_update_loop"]
+    assert (LOOP_TRACES["kernel_pagerank_loop"]
+            == before["kernel_pagerank_loop"])
+    assert UPD_TRACES["apply_batch_packed"] == upd_before
+
+    progs = eng.metrics.batch_device_programs[n0:]
+    assert len(progs) == len(batches) - 1
+    # one fused f32 program + the f64 polish — never the unfused 3
+    assert all(p == 2 for p in progs), progs
+    assert eng.metrics.as_dict()["device_programs_per_batch"] == 2.0
