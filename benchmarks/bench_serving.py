@@ -40,6 +40,7 @@ import numpy as np
 
 from benchmarks.common import emit, rmat_dataset, time_fn
 from repro.data.snap import load_temporal
+from repro.obs import timeit
 from repro.serve import IngestQueue, QueryClient, RankStore, ServeEngine, \
     ServeMetrics, preload_graph_and_feed
 
@@ -78,8 +79,6 @@ def _mesh():
 def _serve_once(ds, events, method, flush_size=64, query_every=100,
                 topk=10, seed=0, engine="xla", kernel_opts=None,
                 mesh=None):
-    import time
-
     graph, feed = preload_graph_and_feed(ds, events)
     # short deadline: while the engine is busy, pending events coalesce
     # into full flush_size batches (the adaptive micro-batching regime)
@@ -102,16 +101,15 @@ def _serve_once(ds, events, method, flush_size=64, query_every=100,
     engine.metrics = metrics
     client = QueryClient(store, ingest, metrics)
 
-    t0 = time.perf_counter()
-    for i in range(1, len(feed)):
-        ingest.submit_insert(int(feed[i, 0]), int(feed[i, 1]))
-        engine.step()
-        if (i + 1) % query_every == 0:
-            client.get_ranks(rng.integers(0, ds.num_vertices, size=4))
-            client.top_k(topk)
-    engine.drain()
-    wall = time.perf_counter() - t0
-    return wall, len(feed) - 1, metrics.as_dict(), engine
+    with timeit() as t:
+        for i in range(1, len(feed)):
+            ingest.submit_insert(int(feed[i, 0]), int(feed[i, 1]))
+            engine.step()
+            if (i + 1) % query_every == 0:
+                client.get_ranks(rng.integers(0, ds.num_vertices, size=4))
+                client.top_k(topk)
+        engine.drain()
+    return t.seconds, len(feed) - 1, metrics.as_dict(), engine
 
 
 def run(dataset="sx-mathoverflow", events=600, flush_size=64,
@@ -207,5 +205,51 @@ def run(dataset="sx-mathoverflow", events=600, flush_size=64,
          f"rebuild_over_update={t_pack / max(t_upd, 1e-12):.1f}")
 
 
+# span taxonomy the phase-breakdown mode reports (DESIGN.md §11); names
+# absent from a run (e.g. kernel-only phases on the xla engine) are
+# skipped rather than emitted as zeros
+PHASES = ("serve.step", "ingest.coalesce", "route_update", "solve",
+          "fused_update_loop", "kernel_loop.f32", "polish.f64",
+          "snapshot.publish", "ppr.repair")
+
+
+def run_traced(dataset="sx-mathoverflow", events=600, flush_size=64,
+               trace_path=None, engine="xla"):
+    """Phase-breakdown pass: the same serve run with the obs tracer on,
+    emitting mean span duration per phase as ``serving/<ds>/phase/<name>``
+    rows (+ the batch frontier-telemetry digest), and writing the
+    Chrome-trace JSON to ``trace_path`` for the nightly artifact."""
+    from repro import obs
+
+    ds = load_temporal(dataset)
+    with obs.tracing(trace_path) as tr:
+        wall, n, m, _ = _serve_once(ds, events, "frontier_prune",
+                                    flush_size, engine=engine)
+        for name in PHASES:
+            spans = tr.spans(name)
+            if not spans:
+                continue
+            emit(f"serving/{ds.name}/phase/{name}",
+                 float(np.mean([s.dur for s in spans])),
+                 f"count={len(spans)};"
+                 f"total_ms={sum(s.dur for s in spans) * 1e3:.1f}")
+    emit(f"serving/{ds.name}/phase/traced_overhead", wall / max(1, n),
+         f"events_per_s_traced={n / wall:.1f};"
+         f"frontier_batches={m.get('frontier_batches', 0)};"
+         f"frontier_iters_mean={m.get('frontier_iterations_mean', 0.0):.1f}")
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default="",
+                    help="run the traced phase-breakdown pass and write "
+                         "the Chrome-trace JSON here (skips the full "
+                         "untraced suite)")
+    ap.add_argument("--engine", default="xla", choices=["xla", "kernel"])
+    a = ap.parse_args()
+    if a.trace:
+        run_traced(trace_path=a.trace, engine=a.engine)
+    else:
+        run()

@@ -5,7 +5,6 @@ run is reproducible run-to-run and no registered bench regenerates a
 graph another bench already built)."""
 from __future__ import annotations
 
-import time
 from typing import Callable
 
 import jax
@@ -13,6 +12,7 @@ import numpy as np
 
 import repro  # noqa: F401
 from repro.core.reference import static_pagerank_ref
+from repro.obs import timeit
 from repro.graph.dynamic import make_batch_update
 from repro.graph.generators import TemporalStream
 from repro.graph.structure import from_coo
@@ -60,10 +60,10 @@ def time_fn(fn: Callable, *args, repeats: int = 3, **kw) -> tuple:
     jax.block_until_ready(out)
     best = np.inf
     for _ in range(repeats):
-        t0 = time.perf_counter()
-        out = fn(*args, **kw)
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
+        with timeit() as t:
+            out = fn(*args, **kw)
+            jax.block_until_ready(out)
+        best = min(best, t.seconds)
     return best, out
 
 

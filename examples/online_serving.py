@@ -34,6 +34,11 @@ ap.add_argument("--engine", default="xla", choices=["xla", "kernel"])
 ap.add_argument("--mesh", type=int, default=0,
                 help="shard the kernel engine over an N-way model mesh "
                      "(0 = single device); requires N visible devices")
+ap.add_argument("--trace", default="",
+                help="write a Chrome-trace JSON of the run here (also "
+                     "enables per-iteration frontier telemetry)")
+ap.add_argument("--metrics-path", default="",
+                help="write the final Prometheus exposition text here")
 args = ap.parse_args()
 
 mesh = None
@@ -60,6 +65,10 @@ engine = ServeEngine(graph, ingest, store, metrics=metrics,
 engine.bootstrap()
 client = QueryClient(store, ingest, metrics)
 
+if args.trace:
+    from repro import obs
+    obs.start_tracing(args.trace)
+
 ingest.submit_insert(0, 1)                   # warm the compiled step
 engine.drain()
 
@@ -79,6 +88,16 @@ try:
         time.sleep(0.05)
 finally:
     engine.stop(drain=True)
+
+if args.trace:
+    from repro import obs
+    obs.get_tracer().write(args.trace)
+    obs.stop_tracing(write=False)
+    print("trace written to", args.trace)
+if args.metrics_path:
+    from repro import obs
+    obs.MetricsExporter(metrics).write(args.metrics_path)
+    print("metrics written to", args.metrics_path)
 
 ppr = client.personalized_top_k(seeds=[0, 1, 2], k=5)
 print("personalized top5 from {0,1,2}:", ppr.vertices.tolist())

@@ -26,12 +26,14 @@ Faithfulness notes (see DESIGN.md §3 for the full adaptation table):
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.graph.structure import EdgeListGraph
+from repro.obs.frontier import NUM_FIELDS as _TEL_K
+from repro.obs.frontier import telemetry_row as _tel_row
 
 ALPHA = 0.85
 TOL = 1e-10
@@ -47,6 +49,11 @@ class PageRankResult(NamedTuple):
     affected_ever: jax.Array  # bool[V] vertices ever marked affected
     edges_processed: jax.Array  # i64[]  Σ over iterations of active in-edges
     vertices_processed: jax.Array  # i64[] Σ over iterations of active vertices
+    # per-iteration frontier telemetry (obs.frontier schema): None unless
+    # the loop ran with telemetry=True; padded [max_iter, k] device rows
+    # straight out of a loop, trimmed host-side f64 [iters, k] from the
+    # engine wrappers (hybrid ladder, serve engine)
+    telemetry: Optional[jax.Array] = None
 
 
 class PRState(NamedTuple):
@@ -78,7 +85,8 @@ def _rank_update(ranks, contrib, inv_deg, c0, alpha, closed_form: bool):
 
 
 @partial(jax.jit, static_argnames=(
-    "closed_form", "prune", "expand", "track_affected", "max_iter"))
+    "closed_form", "prune", "expand", "track_affected", "max_iter",
+    "telemetry"))
 def _pagerank_loop(graph: EdgeListGraph,
                    init_ranks: jax.Array,
                    init_affected: jax.Array,
@@ -91,13 +99,19 @@ def _pagerank_loop(graph: EdgeListGraph,
                    closed_form: bool = False,
                    prune: bool = False,
                    expand: bool = False,
-                   track_affected: bool = True) -> PageRankResult:
+                   track_affected: bool = True,
+                   telemetry: bool = False) -> PageRankResult:
     """The one loop behind all five approaches.
 
     static/naive: affected = all True, expand = prune = False.
     traversal:    affected = BFS mask,  expand = prune = False.
     DF:           expand = True.
     DF-P:         expand = prune = closed_form = True.
+
+    ``telemetry=True`` (static) additionally carries a padded
+    ``[max_iter, k]`` f64 row buffer through the loop and fills one
+    obs.frontier row per iteration — same program count, one extra
+    carried array; with the default False the trace is unchanged.
     """
     V = graph.num_vertices
     deg = graph.out_degree(include_self_loop=True)
@@ -134,8 +148,16 @@ def _pagerank_loop(graph: EdgeListGraph,
             affected.astype(jnp.int64))
         ever = state.affected_ever | new_affected if track_affected \
             else state.affected_ever
-        return PRState(r_new, new_affected, ever, delta, state.it + 1,
-                       edges, verts)
+        new_state = PRState(r_new, new_affected, ever, delta, state.it + 1,
+                            edges, verts)
+        if not telemetry:
+            return new_state
+        n_aff = jnp.sum(affected)
+        row = _tel_row(n_aff, delta,
+                       jnp.sum(new_affected & ~affected),
+                       jnp.sum(affected & ~new_affected),
+                       n_aff, jnp.float64)
+        return new_state, row
 
     def cond(state: PRState) -> jax.Array:
         return (state.delta > tol) & (state.it < max_iter)
@@ -149,9 +171,25 @@ def _pagerank_loop(graph: EdgeListGraph,
         edges_processed=jnp.asarray(0, jnp.int64),
         vertices_processed=jnp.asarray(0, jnp.int64),
     )
-    out = jax.lax.while_loop(cond, body, state0)
+    if not telemetry:
+        out = jax.lax.while_loop(cond, body, state0)
+        return PageRankResult(out.ranks, out.it, out.delta,
+                              out.affected_ever, out.edges_processed,
+                              out.vertices_processed)
+
+    def body_tel(carry):
+        state, tel = carry
+        new_state, row = body(state)
+        tel = jax.lax.dynamic_update_slice(
+            tel, row[None, :], (state.it, jnp.asarray(0, jnp.int32)))
+        return new_state, tel
+
+    out, tel = jax.lax.while_loop(
+        lambda c: cond(c[0]), body_tel,
+        (state0, jnp.zeros((max_iter, _TEL_K), jnp.float64)))
     return PageRankResult(out.ranks, out.it, out.delta, out.affected_ever,
-                          out.edges_processed, out.vertices_processed)
+                          out.edges_processed, out.vertices_processed,
+                          telemetry=tel)
 
 
 # --------------------------------------------------------------------------

@@ -54,6 +54,8 @@ from repro.core.pagerank import (ALPHA, FRONTIER_TOL, MAX_ITER, PRUNE_TOL,
                                  TOL)
 from repro.dist.collectives import bool_or_psum
 from repro.dist.sharding import data_axes as _data_axes
+from repro.obs import trace as obs_trace
+from repro.obs.frontier import FrontierTelemetry
 from repro.graph.partition import (edges_per_device, partition_graph,
                                    vertices_per_shard)
 
@@ -530,6 +532,11 @@ def _get_halo_loop(mesh, spec, halo_h: int, *, alpha: float, tol: float,
     return fn
 
 
+# nominal per-link ICI bandwidth used ONLY to give the modeled
+# ``halo.exchange`` trace span a plausible duration — never for decisions
+_LINK_BW_BYTES_PER_S = 25e9
+
+
 def halo_comm_bytes(halo, iterations: int, *, wire: str = "packed",
                     expand: bool = True) -> int:
     """Wire bytes of one solve's halo exchanges (per device): each
@@ -556,7 +563,8 @@ def sharded_hybrid_pagerank(mesh, sharded, spec, graph, init_ranks,
                             expand: bool = True, polish: bool = True,
                             use_kernel: bool = False, halo=None,
                             wire: str = "packed",
-                            comm_info: Optional[dict] = None
+                            comm_info: Optional[dict] = None,
+                            telemetry: bool = False
                             ) -> pr.PageRankResult:
     """The sharded precision ladder: f32 kernel iterations on the mesh to
     ``tol_f32``, then the f64 XLA polish on the default device seeded
@@ -570,14 +578,24 @@ def sharded_hybrid_pagerank(mesh, sharded, spec, graph, init_ranks,
     flag lanes over the int8/s16 wire; the f64 polish stays exact
     either way).  ``comm_info`` (a dict, mutated) receives the solve's
     ``comm_bytes`` / ``halo_slots`` / ``f32_iterations`` accounting.
+
+    ``telemetry=True`` records per-iteration obs.frontier rows in the
+    polish phase (the sharded f32 loops expose only their endpoint
+    scalars — per-iteration rows would ride the wire every sweep, so the
+    f32 phase is summarized in ``comm_info`` instead); the tracer gets a
+    span per mesh program and a modeled ``halo.exchange`` span from the
+    wire accounting (the exchange runs inside the compiled loop and
+    cannot be host-timed; ``args["modeled"]`` marks it).
     """
     import numpy as np
 
+    tr = obs_trace.get_tracer()
     V = spec.num_vertices
     v_pad = spec.padded_vertices
     deg = graph.out_degree(include_self_loop=True)
     inv_pad = jnp.pad((1.0 / deg).astype(jnp.float32), (0, v_pad - V))
     r_pad = jnp.pad(init_ranks.astype(jnp.float32), (0, v_pad - V))
+    s0 = tr.now()
     if halo is not None:
         loop = _get_halo_loop(mesh, spec, halo.ids.shape[1], alpha=alpha,
                               tol=tol_f32,
@@ -611,6 +629,20 @@ def sharded_hybrid_pagerank(mesh, sharded, spec, graph, init_ranks,
             comm_info["f32_iterations"] = int(it)
             comm_info["halo_slots"] = 0
             comm_info["comm_bytes"] = int(it) * v_pad * 4
+    if tr.enabled:
+        tr.sync(r_out)
+        tr.record("sharded_f32_loop", s0, tr.now() - s0,
+                  exchange="halo" if halo is not None else "psum",
+                  iterations=int(it))
+        cb = (comm_info or {}).get("comm_bytes")
+        if cb is None:
+            cb = halo_comm_bytes(halo, int(it), wire=wire, expand=expand) \
+                if halo is not None else int(it) * v_pad * 4
+        # the exchange lives inside the compiled loop — model its span
+        # from the wire accounting instead of pretending to host-time it
+        tr.record("halo.exchange", s0, cb / _LINK_BW_BYTES_PER_S,
+                  comm_bytes=int(cb), modeled=True,
+                  wire=wire if halo is not None else "psum")
     # hop the replicated results off the mesh so the f64 polish runs as a
     # plain single-device jit (mixing committed mesh arrays into it would
     # be a device mismatch)
@@ -624,15 +656,22 @@ def sharded_hybrid_pagerank(mesh, sharded, spec, graph, init_ranks,
                                  jnp.asarray(np.asarray(delta),
                                              jnp.float64),
                                  ever, edges, verts)
-    p = pr._pagerank_loop(graph, k_ranks.astype(jnp.float64), ever,
-                          alpha=alpha, tol=tol, frontier_tol=frontier_tol,
-                          prune_tol=prune_tol, max_iter=max_iter,
-                          closed_form=closed_form, prune=prune,
-                          expand=expand)
+    with tr.span("polish.f64", program="xla_polish"):
+        p = pr._pagerank_loop(graph, k_ranks.astype(jnp.float64), ever,
+                              alpha=alpha, tol=tol,
+                              frontier_tol=frontier_tol,
+                              prune_tol=prune_tol, max_iter=max_iter,
+                              closed_form=closed_form, prune=prune,
+                              expand=expand, telemetry=telemetry)
+        tr.sync(p.ranks)
+    tel = None
+    if telemetry and p.telemetry is not None:
+        tel = FrontierTelemetry.from_padded(p.telemetry, p.iterations).data
     return pr.PageRankResult(p.ranks, it + p.iterations, p.delta,
                              ever | p.affected_ever,
                              edges + p.edges_processed,
-                             verts + p.vertices_processed)
+                             verts + p.vertices_processed,
+                             telemetry=tel)
 
 
 def sharded_kernel_pagerank(graph, init_ranks, init_affected, mesh, *,

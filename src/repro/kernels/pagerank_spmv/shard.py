@@ -450,6 +450,15 @@ def halo_slots(halo: HaloSpec) -> int:
     return int(halo.ids.shape[0] * halo.ids.shape[1])
 
 
+def halo_occupancy(halo: HaloSpec) -> float:
+    """Live fraction of the pinned halo table (obs gauge): 1.0 means the
+    next boundary-crossing insertion forces a capacity repack."""
+    slots = halo_slots(halo)
+    if slots == 0:
+        return 0.0
+    return float(np.asarray(halo.count).sum()) / slots
+
+
 def build_halo(sharded: ShardedPacked, spec: ShardSpec, *,
                capacity: int | None = None,
                min_capacity: int = 8) -> HaloSpec:

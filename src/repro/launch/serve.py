@@ -26,6 +26,7 @@ import time
 import numpy as np
 
 import repro  # noqa: F401
+from repro import obs
 from repro.core.api import ENGINES, METHODS
 from repro.data.snap import PAPER_TABLE1, load_temporal
 from repro.graph.dynamic import apply_batch, make_batch_update
@@ -73,6 +74,15 @@ def main(argv=None):
                     help="checkpoint every K generations (with --ckpt-dir)")
     ap.add_argument("--min-queries", type=int, default=0,
                     help="exit non-zero unless this many queries were served")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome-trace JSON of the serve run here "
+                         "(enables span tracing + per-iteration frontier "
+                         "telemetry; rows land in <PATH>.frontier.jsonl)")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="run a Prometheus scrape server on this port "
+                         "(0 = ephemeral, printed; -1 = off)")
+    ap.add_argument("--metrics-path", default="",
+                    help="write the final Prometheus exposition text here")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -120,6 +130,19 @@ def main(argv=None):
                          engine=args.engine,
                          static_fallback_frac=args.static_fallback_frac,
                          ppr_index=ppr_cfg)
+    sink = None
+    if args.trace:
+        obs.start_tracing(args.trace)
+        sink = obs.JsonlSink(args.trace + ".frontier.jsonl")
+        engine.telemetry_sink = sink
+        print(f"tracing to {args.trace} "
+              f"(frontier rows: {args.trace}.frontier.jsonl)")
+    exporter = None
+    if args.metrics_port >= 0 or args.metrics_path:
+        exporter = obs.MetricsExporter(metrics)
+        if args.metrics_port >= 0:
+            port = exporter.serve(port=args.metrics_port)
+            print(f"metrics: http://127.0.0.1:{port}/metrics")
     if restored is not None:
         engine.bootstrap(ranks=restored[0], last_seq=start_event - 1)
     else:
@@ -161,6 +184,15 @@ def main(argv=None):
                   f"{ppr_note}", flush=True)
     engine.drain()
     wall = time.perf_counter() - t0
+    if args.trace:
+        written = obs.stop_tracing()
+        sink.close()
+        print(f"trace written to {written}")
+    if exporter is not None:
+        if args.metrics_path:
+            exporter.write(args.metrics_path)
+            print(f"metrics written to {args.metrics_path}")
+        exporter.close()
 
     m = metrics.as_dict()
     m["wall_s"] = wall

@@ -1,0 +1,33 @@
+"""repro.obs — end-to-end observability for the serving stack.
+
+Three pieces (DESIGN.md §11):
+
+  * ``trace``    — a low-overhead, thread-safe span tracer with
+    Chrome-trace-format export (``chrome://tracing`` / Perfetto) and the
+    ``timeit`` micro-helper, the one host-timing idiom;
+  * ``frontier`` — the per-iteration convergence-telemetry schema the
+    XLA and kernel engine loops record when asked (``telemetry=True``):
+    affected count, L∞ residual, frontier growth/prune, active work
+    units per iteration as a compact ``[iters, k]`` array;
+  * ``export``   — Prometheus-text and JSON-lines exporters plus a tiny
+    scrape server over ``ServeMetrics``.
+
+Tracing and telemetry are **off by default and free when off**: the
+global tracer is disabled (spans are shared no-op context managers, no
+device syncs), and the loops' ``telemetry`` flag is static, so the
+untraced hot path compiles to the identical device-program schedule.
+"""
+from repro.obs.export import JsonlSink, MetricsExporter, prometheus_text
+from repro.obs.frontier import FIELDS as TELEMETRY_FIELDS
+from repro.obs.frontier import NUM_FIELDS as TELEMETRY_NUM_FIELDS
+from repro.obs.frontier import FrontierTelemetry
+from repro.obs.trace import (Tracer, get_tracer, set_tracer, span,
+                             start_tracing, stop_tracing, traced, tracing,
+                             timeit)
+
+__all__ = [
+    "FrontierTelemetry", "JsonlSink", "MetricsExporter", "Tracer",
+    "TELEMETRY_FIELDS", "TELEMETRY_NUM_FIELDS", "get_tracer",
+    "prometheus_text", "set_tracer", "span", "start_tracing",
+    "stop_tracing", "traced", "tracing", "timeit",
+]

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.graph.structure import CSRView, EdgeListGraph
+from repro.obs import trace as obs_trace
 from repro.ppr.walks import WalkIndex, _transition, _walk_draws, _walk_keys
 
 _device_csr = jax.jit(EdgeListGraph.to_device_csr)
@@ -114,12 +115,15 @@ def repair_walk_index(index: WalkIndex, graph_new: EdgeListGraph,
     invariant bench_ppr and the tests assert.  The input index is left
     intact (see the module docstring on why no buffer donation).
     """
+    tr = obs_trace.get_tracer()
+    s0 = tr.now()
     V, R, L = index.steps.shape
     N = V * R
     csr_new = _device_csr(graph_new)
     stale, t0 = stale_walks(index.steps, touched)
     num_stale = int(jnp.sum(stale))
     if num_stale == 0:
+        tr.record("ppr.repair", s0, tr.now() - s0, stale=0)
         return dataclasses.replace(index, csr=csr_new), 0
     # pow2 capacity buckets: a stream of varying batches reuses a few
     # compiled resamplers instead of one per distinct stale count
@@ -127,4 +131,7 @@ def repair_walk_index(index: WalkIndex, graph_new: EdgeListGraph,
     ids, t0_sel = _stale_ids(stale, t0, cap)
     steps = _resample(csr_new, index.key, index.steps, ids, t0_sel,
                       index.alpha)
+    tr.sync(steps)
+    tr.record("ppr.repair", s0, tr.now() - s0, stale=num_stale,
+              capacity=cap)
     return dataclasses.replace(index, steps=steps, csr=csr_new), num_stale

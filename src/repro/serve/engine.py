@@ -76,11 +76,15 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core import pagerank as pr
 from repro.core.api import ENGINES, KERNEL_FLAGS, LOOP_FLAGS, Method, \
     build_initial_state, distributed_pagerank
 from repro.graph.dynamic import apply_batch, touched_vertices_mask
 from repro.graph.structure import EdgeListGraph
+from repro.obs import trace as obs_trace
+from repro.obs.frontier import FrontierTelemetry
 from repro.ppr import IndexConfig, WalkIndex, build_walk_index, \
     repair_walk_index
 from repro.serve.ingest import IngestQueue
@@ -105,7 +109,8 @@ class ServeEngine:
                  engine: str = "xla",
                  kernel_opts: Optional[dict] = None,
                  static_fallback_frac: float = 0.25,
-                 ppr_index=None, clock=time.monotonic, **pr_kw):
+                 ppr_index=None, clock=time.monotonic,
+                 telemetry: Optional[bool] = None, **pr_kw):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}; options {ENGINES}")
         self.ingest = ingest
@@ -143,6 +148,14 @@ class ServeEngine:
             self._ppr = ppr_index
         elif ppr_index is not None:
             raise TypeError("ppr_index must be an IndexConfig or WalkIndex")
+        # frontier telemetry: None = follow the global tracer (rows are
+        # recorded exactly when a trace is being taken), True/False pins
+        # it.  Toggling retraces the solve loops once (static jit flag).
+        self.telemetry = telemetry
+        self.last_telemetry: Optional[FrontierTelemetry] = None
+        # optional obs.export.JsonlSink receiving one frontier record
+        # per batch (assigned by the launch driver behind --trace)
+        self.telemetry_sink = None
         self.pr_kw = pr_kw
         self._clock = clock
         self._graph = graph
@@ -232,10 +245,18 @@ class ServeEngine:
         """Apply one coalesced micro-batch if due; True if work was done."""
         if self._ranks is None:
             raise RuntimeError("bootstrap() before step()")
+        tr = obs_trace.get_tracer()
+        s0 = tr.now()
         batch = self.ingest.poll(force=force)
         if batch is None:
             return False
+        # poll may yield nothing, so the span is recorded after the fact
+        # (Chrome-trace nesting is by timestamps, not buffer order)
+        tr.record("ingest.coalesce", s0, tr.now() - s0,
+                  events=batch.num_events, coalesced=batch.num_coalesced)
+        tel = tr.enabled if self.telemetry is None else bool(self.telemetry)
         t0 = self._clock()
+        r0 = tr.now()
         graph_new = apply_batch(self._graph, batch.update)
         method = self.method
         init_state = build_initial_state(self._graph, graph_new,
@@ -278,9 +299,14 @@ class ServeEngine:
                 # which also defragments freed lanes back into window order
                 self._packed = self._repack(graph_new)
                 self.metrics.record_packed_rebuild()
+        # edge-list update + delta routing/packed maintenance (the fused
+        # path defers maintenance into the solve program, traced there)
+        tr.record("route_update", r0, tr.now() - r0,
+                  programs=programs, fused=fuse)
         if fuse:
             from repro.core.kernel_engine import fused_hybrid_pagerank
             kw = dict(KERNEL_FLAGS[method], **self._kernel_kw, **self.pr_kw)
+            kw.setdefault("telemetry", tel)
             try:
                 self._packed, res = fused_hybrid_pagerank(
                     graph_new, self._packed, batch.update, *init_state,
@@ -298,8 +324,11 @@ class ServeEngine:
                     **kw)
             programs += 1 + (1 if kw.get("polish", True) else 0)
         else:
-            res = self._solve(method, graph_new, batch.update, self._ranks,
-                              graph_prev=self._graph, init_state=init_state)
+            with tr.span("solve", method=method, engine=self.engine):
+                res = self._solve(method, graph_new, batch.update,
+                                  self._ranks, graph_prev=self._graph,
+                                  init_state=init_state, telemetry=tel)
+                tr.sync(res.ranks)
             if self.engine == "kernel" and self.mesh is None \
                     and method in DYNAMIC_METHODS:
                 programs += 1 + (1 if self._kernel_kw.get("polish", True)
@@ -321,8 +350,9 @@ class ServeEngine:
             jax.block_until_ready(self._ppr.steps)
         latency = self._clock() - t0
         self._graph, self._ranks = graph_new, res.ranks
-        self.store.publish(graph_new, res.ranks, batch.last_seq,
-                           ppr_index=self._ppr)
+        with tr.span("snapshot.publish"):
+            self.store.publish(graph_new, res.ranks, batch.last_seq,
+                               ppr_index=self._ppr)
         comm = 0
         if self._sharded is not None:
             comm = int(getattr(self._sharded, "last_comm_bytes", 0))
@@ -334,7 +364,41 @@ class ServeEngine:
             edges_processed=int(res.edges_processed),
             vertices_processed=int(res.vertices_processed),
             comm_bytes=comm, device_programs=programs)
+        self._observe_batch(tr, batch, res, tel)
+        tr.record("serve.step", s0, tr.now() - s0, method=method,
+                  events=batch.num_events, fallback=fallback,
+                  device_programs=programs)
         return True
+
+    def _observe_batch(self, tr, batch, res, tel: bool):
+        """Per-batch telemetry capture + engine-attribute gauges."""
+        self.last_telemetry = None
+        raw = getattr(res, "telemetry", None)
+        if tel and raw is not None:
+            if isinstance(raw, np.ndarray):
+                ft = FrontierTelemetry(raw)   # pre-trimmed by a wrapper
+            else:
+                # padded device rows straight out of a jitted loop
+                ft = FrontierTelemetry.from_padded(raw, res.iterations)
+            self.last_telemetry = ft
+            summary = ft.summary()
+            self.metrics.record_frontier(summary)
+            tr.instant("frontier.telemetry", **summary)
+            if self.telemetry_sink is not None:
+                self.telemetry_sink.write(
+                    dict(seq=int(batch.last_seq), summary=summary,
+                         rows=ft.rows()), kind="frontier")
+        m = self.metrics
+        if self.tune_info is not None:
+            m.set_gauge("tune_cache_hit_rate",
+                        1.0 if getattr(self.tune_info, "cache_hit", False)
+                        else 0.0)
+        if self._sharded is not None \
+                and getattr(self._sharded, "halo", None) is not None:
+            from repro.kernels.pagerank_spmv.shard import halo_occupancy
+            m.set_gauge("halo_occupancy", halo_occupancy(self._sharded.halo))
+        m.set_gauge("staleness_in_events",
+                    max(0, self.ingest.latest_seq - int(batch.last_seq)))
 
     def _repack(self, graph: EdgeListGraph):
         """Repack at the pinned shapes, degrading the spill guarantee.
@@ -355,7 +419,7 @@ class ServeEngine:
 
     def _solve(self, method: Method, graph_new: EdgeListGraph, update,
                prev_ranks, graph_prev: Optional[EdgeListGraph] = None,
-               init_state: Optional[tuple] = None):
+               init_state: Optional[tuple] = None, telemetry: bool = False):
         graph_prev = graph_prev if graph_prev is not None else graph_new
         if self.mesh is not None:
             if self._sharded is not None and method in DYNAMIC_METHODS:
@@ -365,8 +429,11 @@ class ServeEngine:
                                              prev_ranks, method))
                 return self._sharded.solve(graph_new, init_ranks,
                                            init_affected,
+                                           telemetry=telemetry,
                                            **KERNEL_FLAGS[method],
                                            **self.pr_kw)
+            # the XLA shard_map step exposes endpoint scalars only —
+            # per-iteration rows would ride the wire every sweep
             return distributed_pagerank(graph_prev, graph_new, update,
                                         prev_ranks, method, self.mesh,
                                         init_state=init_state,
@@ -376,11 +443,13 @@ class ServeEngine:
                 graph_prev, graph_new, update, prev_ranks, method))
         if self.engine == "kernel" and method in DYNAMIC_METHODS:
             from repro.core.kernel_engine import hybrid_pagerank
+            kw = dict(KERNEL_FLAGS[method], **self._kernel_kw, **self.pr_kw)
+            kw.setdefault("telemetry", telemetry)
             return hybrid_pagerank(graph_new, self._packed, init_ranks,
-                                   init_affected, **KERNEL_FLAGS[method],
-                                   **self._kernel_kw, **self.pr_kw)
-        return pr._pagerank_loop(graph_new, init_ranks, init_affected,
-                                 **LOOP_FLAGS[method], **self.pr_kw)
+                                   init_affected, **kw)
+        kw = dict(LOOP_FLAGS[method], **self.pr_kw)
+        kw.setdefault("telemetry", telemetry)
+        return pr._pagerank_loop(graph_new, init_ranks, init_affected, **kw)
 
     def drain(self, force: bool = True) -> int:
         """Run steps until the ingest queue is empty; returns batch count."""

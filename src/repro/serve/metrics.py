@@ -68,6 +68,14 @@ class ServeMetrics:
         # admission
         self.accepted = 0
         self.rejected = 0
+        # point-in-time gauges set by the owner (serve engine): values
+        # that live on engine attributes — halo occupancy, tune-cache
+        # hits, staleness-in-events — so as_dict is the ONE reporting
+        # surface and the exporter never reaches into the engine
+        self.gauges: dict = {}
+        # per-batch frontier-telemetry digests (obs.frontier summaries);
+        # recorded only when telemetry is on, so usually empty
+        self.frontier_summaries: List[dict] = []
 
     # ---- recording -------------------------------------------------------
     def record_admission(self, accepted: bool):
@@ -110,6 +118,15 @@ class ServeMetrics:
         self.queries_served += 1
         self.query_staleness.append(int(staleness_events))
 
+    def set_gauge(self, name: str, value: float):
+        """Set/overwrite a point-in-time gauge (snake_case name)."""
+        self.gauges[str(name)] = float(value)
+
+    def record_frontier(self, summary: dict):
+        """One batch's frontier-telemetry digest
+        (``FrontierTelemetry.summary()``)."""
+        self.frontier_summaries.append(dict(summary))
+
     # ---- reduction -------------------------------------------------------
     def as_dict(self) -> dict:
         lat = self.update_latency_s
@@ -117,7 +134,7 @@ class ServeMetrics:
                 if self._t_first_batch is not None else 0.0)
         # events/s needs a span; a single batch contributes its own latency
         denom = span if span > 0 else (lat[0] if lat else 0.0)
-        return dict(
+        out = dict(
             batches=len(lat),
             events_applied=self.events_applied,
             events_coalesced=self.events_coalesced,
@@ -146,3 +163,16 @@ class ServeMetrics:
             admission_accepted=self.accepted,
             admission_rejected=self.rejected,
         )
+        if self.frontier_summaries:
+            fs = self.frontier_summaries
+            out["frontier_batches"] = len(fs)
+            out["frontier_iterations_mean"] = float(
+                np.mean([s.get("iterations", 0) for s in fs]))
+            out["frontier_affected_peak_mean"] = float(
+                np.mean([s.get("affected_peak", 0.0) for s in fs]))
+            out["frontier_residual_final"] = float(
+                fs[-1].get("residual_final", 0.0))
+        # gauges last, but core counters always win a name collision
+        for k, v in sorted(self.gauges.items()):
+            out.setdefault(k, v)
+        return out
