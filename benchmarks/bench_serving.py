@@ -78,7 +78,7 @@ def _mesh():
 
 def _serve_once(ds, events, method, flush_size=64, query_every=100,
                 topk=10, seed=0, engine="xla", kernel_opts=None,
-                mesh=None):
+                mesh=None, monitor=None):
     graph, feed = preload_graph_and_feed(ds, events)
     # short deadline: while the engine is busy, pending events coalesce
     # into full flush_size batches (the adaptive micro-batching regime)
@@ -87,7 +87,7 @@ def _serve_once(ds, events, method, flush_size=64, query_every=100,
     store = RankStore()
     engine = ServeEngine(graph, ingest, store, method=method,
                          engine=engine, kernel_opts=kernel_opts,
-                         mesh=mesh)
+                         mesh=mesh, monitor=monitor)
     engine.bootstrap()
     rng = np.random.default_rng(seed)
     # warm the compiled step so the timed run measures steady state
@@ -113,7 +113,7 @@ def _serve_once(ds, events, method, flush_size=64, query_every=100,
 
 
 def run(dataset="sx-mathoverflow", events=600, flush_size=64,
-        query_every=100, rmat_events=320):
+        query_every=100, rmat_events=320, monitor_events=4096):
     ds = load_temporal(dataset)
     for method in METHODS:
         wall, n, m, _ = _serve_once(ds, events, method, flush_size,
@@ -124,6 +124,33 @@ def run(dataset="sx-mathoverflow", events=600, flush_size=64,
              f"p99_staleness_ev={m['staleness_p99_events']:.0f};"
              f"affected={m['affected_mean']:.0f};"
              f"fallbacks={m['static_fallbacks']}")
+
+    # ---- correctness-monitor overhead (sentinels + recorder on every
+    # batch, background shadow verification sampling 1/64) ---------------
+    # long enough that the timed window spans many multiples of the
+    # shadow period, so the sampled reference solves land inside it and
+    # the ratio is an honest steady-state cost, not a lucky miss.  The
+    # acceptance bar is <=5% events/s overhead (check_regression gates
+    # rows named monitor_overhead at an absolute floor, no baseline
+    # needed).
+    from repro.obs import CorrectnessMonitor, MonitorConfig
+    wall0, n0, _, _ = _serve_once(ds, monitor_events, "frontier_prune",
+                                  flush_size, query_every)
+    # latency/staleness SLOs are meaningless for a firehose feed on a
+    # CPU bench host, so park them out of reach: the incidents count in
+    # the row then reflects correctness violations only
+    mon = CorrectnessMonitor(MonitorConfig(
+        shadow_every=64, latency_slo_ms=1e9, staleness_slo_events=10**9))
+    wall1, n1, mm, _ = _serve_once(ds, monitor_events, "frontier_prune",
+                                   flush_size, query_every, monitor=mon)
+    mon.close()
+    rate0, rate1 = n0 / wall0, n1 / wall1
+    emit(f"serving/{ds.name}/monitor_overhead", 0.0,
+         f"events_per_s_ratio={rate1 / rate0:.3f};shadow_every=64;"
+         f"shadow_samples={int(mm.get('shadow_samples', 0))};"
+         f"incidents={int(mm.get('incidents_total', 0))};"
+         f"events_per_s_plain={rate0:.1f};"
+         f"events_per_s_monitored={rate1:.1f}")
 
     # ---- xla vs kernel vs sharded-kernel, 131k-vertex RMAT stream ------
     rmat = rmat_dataset()

@@ -15,6 +15,14 @@ row for local use.
 The baseline is auto-discovered as the lexicographically newest
 ``BENCH_*.json`` in the repo root (the dated filenames sort by date), or
 passed explicitly with ``--baseline``.
+
+``monitor_overhead`` rows gate differently: they are an *absolute*
+floor, not a baseline delta.  The serving acceptance bar is that the
+correctness monitor (sentinels + flight recorder every batch, shadow
+verification 1/64) costs at most ~5% events/s, so any
+``events_per_s_ratio`` in a row whose name contains
+``monitor_overhead`` must stay above ``--monitor-floor`` (default
+0.95) — no committed baseline required.
 """
 from __future__ import annotations
 
@@ -43,6 +51,30 @@ def ratio_rows(results: dict, modeled_only: bool = True) -> dict:
 def latest_baseline(repo_root: str) -> str | None:
     paths = sorted(glob.glob(os.path.join(repo_root, "BENCH_*.json")))
     return paths[-1] if paths else None
+
+
+def check_monitor_floor(current_path: str, floor: float) -> int:
+    """Gate monitor_overhead ratio rows at an absolute floor."""
+    with open(current_path) as f:
+        rows = ratio_rows(json.load(f), modeled_only=False)
+    rows = {n: r for n, r in rows.items() if "monitor_overhead" in n}
+    if not rows:
+        return 0
+    failures = []
+    for name, cur in sorted(rows.items()):
+        status = "FAIL" if cur < floor else "ok"
+        print(f"{status}  {name}: {cur:.3f} vs absolute floor {floor:.2f}")
+        if cur < floor:
+            failures.append(f"{name}: {cur:.3f} < {floor:.2f} "
+                            f"(monitor overhead above budget)")
+    if failures:
+        print(f"\n{len(failures)} monitor-overhead floor violation(s):")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print(f"all {len(rows)} monitor_overhead ratio(s) above "
+          f"{floor:.2f} floor")
+    return 0
 
 
 def check(current_path: str, baseline_path: str, tolerance: float,
@@ -89,15 +121,19 @@ def main(argv=None) -> int:
                     help="allowed fractional drop below baseline")
     ap.add_argument("--all-ratios", action="store_true",
                     help="gate wall-clock ratios too, not just modeled")
+    ap.add_argument("--monitor-floor", type=float, default=0.95,
+                    help="absolute events_per_s_ratio floor for "
+                         "monitor_overhead rows (<=5%% overhead budget)")
     args = ap.parse_args(argv)
+    rc = check_monitor_floor(args.current, args.monitor_floor)
     baseline = args.baseline or latest_baseline(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
     if baseline is None:
         print("no committed BENCH_*.json baseline found; nothing to gate")
-        return 0
+        return rc
     print(f"baseline: {baseline}")
     return check(args.current, baseline, args.tolerance,
-                 modeled_only=not args.all_ratios)
+                 modeled_only=not args.all_ratios) or rc
 
 
 if __name__ == "__main__":

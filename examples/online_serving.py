@@ -39,6 +39,17 @@ ap.add_argument("--trace", default="",
                      "enables per-iteration frontier telemetry)")
 ap.add_argument("--metrics-path", default="",
                 help="write the final Prometheus exposition text here")
+ap.add_argument("--monitor", action="store_true",
+                help="enable the correctness monitor (sentinels, shadow "
+                     "verification, flight recorder, SLO alerts)")
+ap.add_argument("--shadow-every", type=int, default=8,
+                help="shadow-verify every Kth batch (with --monitor)")
+ap.add_argument("--incident-dir", default="",
+                help="dump a replayable incident bundle here on the "
+                     "first error-severity incident (implies --monitor)")
+ap.add_argument("--inject-fault", default="",
+                help="DEBUG: GEN[:KIND[:VERTEX[:SCALE]]] one-shot "
+                     "corruption, e.g. 3:rank:0:4.0 (implies --monitor)")
 args = ap.parse_args()
 
 mesh = None
@@ -59,10 +70,24 @@ graph = from_coo(edges[:, 0], edges[:, 1], n,
 metrics = ServeMetrics()
 ingest = IngestQueue(flush_size=64, flush_interval=0.02, max_pending=4096)
 store = RankStore()
+monitor = None
+if args.monitor or args.incident_dir or args.inject_fault:
+    from repro.obs import CorrectnessMonitor, MonitorConfig
+    monitor = CorrectnessMonitor(MonitorConfig(
+        shadow_every=args.shadow_every,
+        incident_dir=args.incident_dir or None))
 engine = ServeEngine(graph, ingest, store, metrics=metrics,
                      method="frontier_prune", engine=args.engine, mesh=mesh,
-                     kernel_opts=dict(use_kernel=True, be=256, vb=256))
+                     kernel_opts=dict(use_kernel=True, be=256, vb=256),
+                     monitor=monitor)
 engine.bootstrap()
+if args.inject_fault:
+    parts = args.inject_fault.split(":")
+    engine.inject_fault(int(parts[0]),
+                        kind=parts[1] if len(parts) > 1 else "rank",
+                        vertex=int(parts[2]) if len(parts) > 2 else 0,
+                        scale=float(parts[3]) if len(parts) > 3 else 2.0)
+    print("fault armed:", args.inject_fault)
 client = QueryClient(store, ingest, metrics)
 
 if args.trace:
@@ -98,6 +123,14 @@ if args.metrics_path:
     from repro import obs
     obs.MetricsExporter(metrics).write(args.metrics_path)
     print("metrics written to", args.metrics_path)
+
+if monitor is not None:
+    monitor.close()                      # drain the shadow thread
+    s = monitor.summary()
+    print(f"incidents detected: {s['incidents_total']} "
+          f"{s['incidents_by_kind']}")
+    if monitor.last_bundle:
+        print("incident bundle:", monitor.last_bundle)
 
 ppr = client.personalized_top_k(seeds=[0, 1, 2], k=5)
 print("personalized top5 from {0,1,2}:", ppr.vertices.tolist())

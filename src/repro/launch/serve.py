@@ -83,6 +83,21 @@ def main(argv=None):
                          "(0 = ephemeral, printed; -1 = off)")
     ap.add_argument("--metrics-path", default="",
                     help="write the final Prometheus exposition text here")
+    ap.add_argument("--monitor", action="store_true",
+                    help="enable correctness monitoring: invariant "
+                         "sentinels, sampled shadow verification, flight "
+                         "recorder, SLO burn-rate alerts (DESIGN.md §12)")
+    ap.add_argument("--shadow-every", type=int, default=64,
+                    help="shadow-verify every Kth micro-batch against "
+                         "the f64 reference solve (0 = off)")
+    ap.add_argument("--incident-dir", default="",
+                    help="dump a replayable flight-recorder bundle here "
+                         "on the first error-severity incident "
+                         "(implies --monitor)")
+    ap.add_argument("--inject-fault", default="",
+                    help="DEBUG: corrupt the engine at a generation, as "
+                         "GEN[:KIND[:VERTEX[:SCALE]]] with KIND rank|"
+                         "event (e.g. 5:rank:0:4.0); implies --monitor")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -125,11 +140,30 @@ def main(argv=None):
     ppr_cfg = (IndexConfig(num_walks=args.ppr_walks, max_len=args.ppr_len,
                            seed=args.seed)
                if args.ppr_walks > 0 else None)
+    monitor = incident_sink = None
+    if args.monitor or args.incident_dir or args.inject_fault:
+        if args.incident_dir and args.trace:
+            incident_sink = obs.JsonlSink(args.trace + ".incidents.jsonl")
+        monitor = obs.CorrectnessMonitor(
+            obs.MonitorConfig(shadow_every=args.shadow_every,
+                              incident_dir=args.incident_dir or None),
+            sink=incident_sink)
+        print(f"correctness monitor on: shadow 1/{args.shadow_every}"
+              + (f" incidents -> {args.incident_dir}"
+                 if args.incident_dir else ""))
     engine = ServeEngine(graph, ingest, store, metrics=metrics,
                          method=args.method, mesh=mesh,
                          engine=args.engine,
                          static_fallback_frac=args.static_fallback_frac,
-                         ppr_index=ppr_cfg)
+                         ppr_index=ppr_cfg, monitor=monitor)
+    if args.inject_fault:
+        parts = args.inject_fault.split(":")
+        engine.inject_fault(
+            int(parts[0]),
+            kind=parts[1] if len(parts) > 1 else "rank",
+            vertex=int(parts[2]) if len(parts) > 2 else 0,
+            scale=float(parts[3]) if len(parts) > 3 else 2.0)
+        print(f"fault armed: {args.inject_fault}")
     sink = None
     if args.trace:
         obs.start_tracing(args.trace)
@@ -184,6 +218,11 @@ def main(argv=None):
                   f"{ppr_note}", flush=True)
     engine.drain()
     wall = time.perf_counter() - t0
+    if monitor is not None:
+        monitor.close()                    # drain the shadow thread
+        print("monitor " + json.dumps(monitor.summary()))
+        if incident_sink is not None:
+            incident_sink.close()
     if args.trace:
         written = obs.stop_tracing()
         sink.close()

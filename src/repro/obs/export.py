@@ -23,6 +23,7 @@ port, exposed as ``.port`` for tests.
 from __future__ import annotations
 
 import json
+import os
 import re
 import threading
 import time
@@ -86,27 +87,63 @@ def prometheus_text(metrics: dict, prefix: str = "repro_",
 
 class JsonlSink:
     """Append-only JSON-lines writer (one flush per record, so a killed
-    serve process loses at most the in-flight line)."""
+    serve process loses at most the in-flight line).
 
-    def __init__(self, path: str, clock=time.time):
+    ``max_bytes`` caps on-disk growth with logrotate-style rotation:
+    when appending a line would push the file past the cap, the sink
+    shifts ``path.1 -> path.2 -> ...`` (dropping ``path.<backups>``),
+    renames ``path`` to ``path.1`` and starts fresh — a serve process
+    left running for days keeps at most ``(backups + 1) * max_bytes``
+    of telemetry.  ``backups=0`` truncates instead of keeping history.
+    ``max_bytes=None`` (the default) preserves the unbounded append
+    behaviour for short runs.
+    """
+
+    def __init__(self, path: str, clock=time.time,
+                 max_bytes: Optional[int] = None, backups: int = 3):
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError("max_bytes must be positive (or None)")
         self.path = path
+        self.max_bytes = max_bytes
+        self.backups = backups
+        self.rotations = 0
         self._clock = clock
         self._lock = threading.Lock()
         self._f = open(path, "a")
+        self._size = self._f.tell()
 
     def write(self, record: dict, kind: Optional[str] = None) -> None:
         row = dict(record)
         if kind is not None:
             row["kind"] = kind
         row.setdefault("t", self._clock())
-        line = json.dumps(row, default=_default)
+        line = json.dumps(row, default=_default) + "\n"
         with self._lock:
-            self._f.write(line + "\n")
+            if self._f.closed:
+                return
+            if (self.max_bytes is not None and self._size > 0
+                    and self._size + len(line) > self.max_bytes):
+                self._rotate_locked()
+            self._f.write(line)
             self._f.flush()
+            self._size += len(line)
+
+    def _rotate_locked(self) -> None:
+        self._f.close()
+        if self.backups > 0:
+            for i in range(self.backups - 1, 0, -1):
+                src = f"{self.path}.{i}"
+                if os.path.exists(src):
+                    os.replace(src, f"{self.path}.{i + 1}")
+            os.replace(self.path, f"{self.path}.1")
+        self._f = open(self.path, "w")
+        self._size = 0
+        self.rotations += 1
 
     def close(self) -> None:
         with self._lock:
-            self._f.close()
+            if not self._f.closed:
+                self._f.close()
 
 
 def _default(v):
@@ -153,7 +190,18 @@ class MetricsExporter:
 
     # ---- scrape server ---------------------------------------------------
     def serve(self, port: int = 0, host: str = "127.0.0.1") -> int:
-        """Start a daemon HTTP scrape server; returns the bound port."""
+        """Start a daemon HTTP scrape server; returns the bound port.
+
+        ``port=0`` binds an ephemeral port (read it from the return
+        value or ``.port``), so parallel tests and co-located serve
+        processes never collide.  Calling ``serve`` twice without a
+        ``close`` in between is an error, and ``close`` is idempotent —
+        the exporter also works as a context manager.
+        """
+        if self._httpd is not None:
+            raise RuntimeError(
+                f"exporter already serving on port {self.port}; "
+                f"close() it first")
         from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
         exporter = self
@@ -189,9 +237,18 @@ class MetricsExporter:
         return self.port
 
     def close(self) -> None:
-        if self._httpd is not None:
-            self._httpd.shutdown()
-            self._httpd.server_close()
-            self._httpd = None
+        """Stop the scrape server and release the port (idempotent)."""
+        httpd, self._httpd = self._httpd, None
+        if httpd is not None:
+            httpd.shutdown()
+            httpd.server_close()
+            if self._thread is not None:
+                self._thread.join(timeout=5.0)
             self._thread = None
             self.port = None
+
+    def __enter__(self) -> "MetricsExporter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

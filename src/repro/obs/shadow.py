@@ -1,0 +1,207 @@
+"""Sampled shadow verification: live measurement of DF-P pruning drift.
+
+DF-P trades exactness for work: pruned vertices keep slightly stale
+ranks, and over thousands of micro-batches that error can compound in
+ways the paper only measures offline.  The shadow verifier closes the
+loop in production: every Kth published snapshot is re-solved *from
+scratch* by the reference engine (``core.pagerank.static_pagerank``,
+f64 XLA, tol=1e-10 — the oracle every parity test trusts) and the
+serving ranks are diffed against it:
+
+  * ``l1``   — total variation-style drift, the paper's offline metric;
+  * ``linf`` — worst single vertex, what a query actually returns.
+
+The reference solve is orders of magnitude more expensive than a
+micro-batch step, so it runs on a **background daemon thread** with a
+depth-1 "latest wins" mailbox: if a new sample arrives while the
+previous one is still solving, the stale pending sample is replaced
+(``skipped`` counts them) — the hot path never blocks, and backlog can
+never grow.  ``background=False`` solves synchronously (tests,
+benchmarks that want determinism).
+
+Divergence beyond the configured budgets produces ``Incident`` records
+(drained by the ``CorrectnessMonitor``); every completed sample lands
+in ``reports`` and the gauge dict regardless, so the exporter shows
+the drift trajectory even while it is healthy.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import List, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.core import pagerank as pr
+from repro.obs.sentinel import ERROR, Incident
+
+__all__ = ["ShadowReport", "ShadowVerifier"]
+
+
+class ShadowReport(NamedTuple):
+    generation: int     # snapshot generation that was verified
+    l1: float           # sum |serving - reference|
+    linf: float         # max |serving - reference|
+    mass_err: float     # |sum(reference) - 1| (reference sanity)
+    iterations: int     # reference solve iterations
+    solve_s: float      # reference solve wall time
+    lag_batches: int    # batches published between submit and finish
+
+
+class _Job(NamedTuple):
+    generation: int
+    last_seq: int
+    graph: object       # EdgeListGraph snapshot (immutable pytree)
+    ranks: object       # served f64 ranks for the same generation
+    submitted_at_count: int
+
+
+class ShadowVerifier:
+    """Every-Kth-batch reference verification off the hot path."""
+
+    def __init__(self, every: int = 64, l1_budget: float = 1e-4,
+                 linf_budget: float = 1e-5, tol: float = 1e-10,
+                 max_iter: int = 500, background: bool = True,
+                 max_reports: int = 1024, clock=time.time):
+        if every < 1:
+            raise ValueError("every must be >= 1")
+        self.every = every
+        self.l1_budget = l1_budget
+        self.linf_budget = linf_budget
+        self.tol = tol
+        self.max_iter = max_iter
+        self.background = background
+        self._clock = clock
+        self.reports: deque = deque(maxlen=max_reports)
+        self.samples = 0           # completed reference solves
+        self.skipped = 0           # samples displaced by a newer one
+        self._count = 0            # batches offered via maybe_submit
+        self._incidents: List[Incident] = []
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._pending: Optional[_Job] = None
+        self._busy = False
+        self._stopping = False
+        self._thread: Optional[threading.Thread] = None
+        if background:
+            self._thread = threading.Thread(target=self._loop,
+                                            name="shadow-verifier",
+                                            daemon=True)
+            self._thread.start()
+
+    # ---- hot-path side ---------------------------------------------------
+    def maybe_submit(self, generation: int, last_seq: int, graph,
+                     ranks) -> bool:
+        """Offer one published snapshot; True if it was sampled.
+
+        Fires on the first batch and every ``every`` batches after, so
+        short streams still get at least one reference point.
+        """
+        take = (self._count % self.every) == 0
+        self._count += 1
+        if not take:
+            return False
+        job = _Job(int(generation), int(last_seq), graph, ranks,
+                   self._count)
+        if not self.background:
+            self._verify(job)
+            return True
+        with self._cond:
+            if self._pending is not None:
+                self.skipped += 1          # latest wins, backlog stays 0
+            self._pending = job
+            self._cond.notify()
+        return True
+
+    def take_incidents(self) -> List[Incident]:
+        """Drain incidents produced since the last call (thread-safe)."""
+        with self._lock:
+            out, self._incidents = self._incidents, []
+        return out
+
+    def gauges(self) -> dict:
+        with self._lock:
+            last = self.reports[-1] if self.reports else None
+        g = {"shadow_samples": float(self.samples),
+             "shadow_skipped": float(self.skipped)}
+        if last is not None:
+            g.update(shadow_l1=last.l1, shadow_linf=last.linf,
+                     shadow_lag_batches=float(last.lag_batches))
+        return g
+
+    # ---- verification ----------------------------------------------------
+    def _verify(self, job: _Job) -> ShadowReport:
+        t0 = self._clock()
+        ref = pr.static_pagerank(job.graph, tol=self.tol,
+                                 max_iter=self.max_iter)
+        diff = jnp.abs(jnp.asarray(job.ranks, jnp.float64)
+                       - ref.ranks)
+        l1 = float(jnp.sum(diff))
+        linf = float(jnp.max(diff))
+        mass_err = float(jnp.abs(jnp.sum(ref.ranks) - 1.0))
+        rep = ShadowReport(job.generation, l1, linf, mass_err,
+                           int(ref.iterations), self._clock() - t0,
+                           self._count - job.submitted_at_count)
+        now = self._clock()
+        incs = []
+        if l1 > self.l1_budget:
+            incs.append(Incident(
+                "shadow_l1", ERROR, job.generation, job.last_seq, l1,
+                self.l1_budget,
+                f"serving snapshot diverged from the f64 reference by "
+                f"L1={l1:.3e} (budget {self.l1_budget:.1e})", now))
+        if linf > self.linf_budget:
+            incs.append(Incident(
+                "shadow_linf", ERROR, job.generation, job.last_seq, linf,
+                self.linf_budget,
+                f"worst-vertex divergence {linf:.3e} exceeds "
+                f"{self.linf_budget:.1e}", now))
+        with self._lock:
+            self.reports.append(rep)
+            self.samples += 1
+            self._incidents.extend(incs)
+        return rep
+
+    # ---- background thread -----------------------------------------------
+    def _loop(self):
+        while True:
+            with self._cond:
+                while self._pending is None and not self._stopping:
+                    self._cond.wait()
+                if self._stopping and self._pending is None:
+                    return
+                job, self._pending = self._pending, None
+                self._busy = True
+            try:
+                self._verify(job)
+            finally:
+                with self._cond:
+                    self._busy = False
+                    self._cond.notify_all()
+
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        """Block until no sample is pending or running; True if idle."""
+        if not self.background:
+            return True
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        with self._cond:
+            while self._pending is not None or self._busy:
+                left = (None if deadline is None
+                        else deadline - time.monotonic())
+                if left is not None and left <= 0:
+                    return False
+                self._cond.wait(timeout=left)
+        return True
+
+    def stop(self, timeout: Optional[float] = 30.0):
+        """Finish any in-flight sample, then stop the worker thread."""
+        if self._thread is None:
+            return
+        self.flush(timeout=timeout)
+        with self._cond:
+            self._stopping = True
+            self._cond.notify_all()
+        self._thread.join(timeout=timeout)
+        self._thread = None

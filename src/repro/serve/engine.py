@@ -66,6 +66,12 @@ ranks: built at bootstrap, repaired inside every micro-batch step from
 the batch's ``touched_vertices_mask`` (only walks intersecting touched
 vertices resample), and published with each snapshot so index-backed
 ``personalized_top_k`` answers stay consistent with the served ranks.
+
+``monitor=`` (an ``obs.monitor.CorrectnessMonitor``) opts the engine
+into correctness observability: per-batch invariant sentinels, sampled
+shadow verification, flight recording with bit-for-bit replay, and SLO
+burn-rate alerts (DESIGN.md §12).  ``inject_fault`` arms a one-shot
+debug corruption so that pipeline can be exercised end-to-end.
 """
 from __future__ import annotations
 
@@ -110,7 +116,8 @@ class ServeEngine:
                  kernel_opts: Optional[dict] = None,
                  static_fallback_frac: float = 0.25,
                  ppr_index=None, clock=time.monotonic,
-                 telemetry: Optional[bool] = None, **pr_kw):
+                 telemetry: Optional[bool] = None, monitor=None,
+                 **pr_kw):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}; options {ENGINES}")
         self.ingest = ingest
@@ -162,6 +169,13 @@ class ServeEngine:
         self._ranks: Optional[jax.Array] = None
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        # correctness monitor (obs.monitor.CorrectnessMonitor): hooked
+        # after bootstrap and after every publish; None = zero overhead
+        self.monitor = monitor
+        # one-shot debug fault armed by inject_fault(); applied (and
+        # cleared) by the step that publishes the chosen generation
+        self._fault: Optional[dict] = None
+        self.faults_injected = 0
 
     # ---- lifecycle -------------------------------------------------------
     def bootstrap(self, ranks: Optional[jax.Array] = None,
@@ -237,8 +251,33 @@ class ServeEngine:
             self._ppr = build_walk_index(self._graph, self._ppr_cfg)
         self._ranks = ranks
         seq = self.ingest.start_seq - 1 if last_seq is None else last_seq
-        return self.store.publish(self._graph, ranks, seq,
-                                  ppr_index=self._ppr)
+        gen = self.store.publish(self._graph, ranks, seq,
+                                 ppr_index=self._ppr)
+        if self.monitor is not None:
+            # bind the recorder's config + capture the bootstrap anchor
+            self.monitor.on_bootstrap(self)
+        return gen
+
+    # ---- debug fault injection ------------------------------------------
+    def inject_fault(self, generation: int, kind: str = "rank",
+                     vertex: int = 0, scale: float = 2.0) -> None:
+        """DEBUG ONLY: arm a one-shot corruption for ``generation``.
+
+        ``kind="rank"`` multiplies ``ranks[vertex]`` by ``scale`` on the
+        solve's *output*, after convergence but before publish — the
+        exact shape of the DF blind spot (a vertex no later frontier
+        revisits keeps the corrupt value forever), which is what the
+        mass sentinel and shadow verifier exist to catch.
+        ``kind="event"`` redirects every insertion in that generation's
+        coalesced batch to land on ``vertex`` *before* the update is
+        applied (or recorded), so the served graph silently diverges
+        from the submitted feed.  Used by tests and the CI incident-
+        replay smoke lane; never call it in production serving.
+        """
+        if kind not in ("rank", "event"):
+            raise ValueError(f"unknown fault kind {kind!r}")
+        self._fault = dict(generation=int(generation), kind=str(kind),
+                           vertex=int(vertex), scale=float(scale))
 
     # ---- one micro-batch -------------------------------------------------
     def step(self, force: bool = False) -> bool:
@@ -255,6 +294,21 @@ class ServeEngine:
         tr.record("ingest.coalesce", s0, tr.now() - s0,
                   events=batch.num_events, coalesced=batch.num_coalesced)
         tel = tr.enabled if self.telemetry is None else bool(self.telemetry)
+        fault = None
+        if self._fault is not None \
+                and self.store.generation + 1 == self._fault["generation"]:
+            fault, self._fault = self._fault, None
+            self.faults_injected += 1
+        if fault is not None and fault["kind"] == "event":
+            # corrupt the batch BEFORE it is applied or recorded: the
+            # flight recorder sees (and replays) the corrupted stream,
+            # exactly as a feed bug would present
+            upd = batch.update
+            upd = upd._replace(ins_dst=jnp.where(
+                upd.ins_mask,
+                jnp.asarray(fault["vertex"], upd.ins_dst.dtype),
+                upd.ins_dst))
+            batch = batch._replace(update=upd)
         t0 = self._clock()
         r0 = tr.now()
         graph_new = apply_batch(self._graph, batch.update)
@@ -335,6 +389,10 @@ class ServeEngine:
                                  else 0)
             else:
                 programs += 1   # one XLA solve (mesh paths count theirs)
+        if fault is not None and fault["kind"] == "rank":
+            res = res._replace(
+                ranks=res.ranks.at[fault["vertex"]].multiply(
+                    fault["scale"]))
         resampled = 0
         if self._ppr is not None:
             # the same touched signal that seeds the DF frontier drives
@@ -356,15 +414,26 @@ class ServeEngine:
         comm = 0
         if self._sharded is not None:
             comm = int(getattr(self._sharded, "last_comm_bytes", 0))
+        affected_count = int(jnp.sum(res.affected_ever))
         self.metrics.record_batch(
             latency, batch.num_events, batch.num_coalesced,
-            affected=int(jnp.sum(res.affected_ever)),
+            affected=affected_count,
             iterations=int(res.iterations), fallback=fallback,
             walks_resampled=resampled,
             edges_processed=int(res.edges_processed),
             vertices_processed=int(res.vertices_processed),
             comm_bytes=comm, device_programs=programs)
         self._observe_batch(tr, batch, res, tel)
+        if self.monitor is not None:
+            m0 = tr.now()
+            self.monitor.on_batch(
+                engine=self, batch=batch, graph=graph_new, result=res,
+                method=method, fallback=fallback, latency_s=latency,
+                affected=affected_count, fault=fault)
+            tr.record("monitor.observe", m0, tr.now() - m0)
+            if self.faults_injected:
+                self.metrics.set_gauge("faults_injected",
+                                       float(self.faults_injected))
         tr.record("serve.step", s0, tr.now() - s0, method=method,
                   events=batch.num_events, fallback=fallback,
                   device_programs=programs)

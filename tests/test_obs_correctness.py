@@ -1,0 +1,444 @@
+"""Correctness observability (DESIGN.md §12): invariant sentinels,
+sampled shadow verification, flight-recorder capture → bit-for-bit
+replay, SLO burn-rate arithmetic, and export hardening (JSONL rotation,
+exporter lifecycle)."""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.core.pagerank import static_pagerank
+from repro.graph.generators import erdos_renyi_edges
+from repro.graph.structure import from_coo
+from repro.obs import (CorrectnessMonitor, JsonlSink, MetricsExporter,
+                       MonitorConfig, ShadowVerifier, SloSet, SloTracker,
+                       load_bundle, rank_digest, replay)
+from repro.obs.sentinel import InvariantSentinel, SentinelConfig
+from repro.serve import IngestQueue, RankStore, ServeEngine, ServeMetrics
+
+N = 64
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def _graph(seed=0, m=400, cap_extra=512):
+    edges, n = erdos_renyi_edges(N, m, seed=seed)
+    return from_coo(edges[:, 0], edges[:, 1], n,
+                    edge_capacity=len(edges) + cap_extra)
+
+
+def _service(graph, monitor=None, flush_size=4, **engine_kw):
+    metrics = ServeMetrics()
+    ingest = IngestQueue(flush_size=flush_size, flush_interval=0.0)
+    store = RankStore()
+    engine = ServeEngine(graph, ingest, store, metrics=metrics,
+                         method="frontier_prune", monitor=monitor,
+                         **engine_kw)
+    return ingest, store, engine, metrics
+
+
+def _feed(ingest, engine, num_batches, flush_size=4, seed=0):
+    """Submit random insert events and drain them batch by batch."""
+    rng = np.random.default_rng(seed)
+    for _ in range(num_batches * flush_size):
+        u, v = rng.integers(0, N, size=2)
+        while u == v:
+            u, v = rng.integers(0, N, size=2)
+        ingest.submit_insert(int(u), int(v))
+    return engine.drain()
+
+
+# ---------------------------------------------------------------------------
+# rank digest
+# ---------------------------------------------------------------------------
+
+def test_rank_digest_is_bit_sensitive():
+    g = _graph()
+    r = np.asarray(static_pagerank(g).ranks)
+    d0 = rank_digest(jnp.asarray(r))
+    assert rank_digest(jnp.asarray(r.copy())) == d0     # value-determined
+    bumped = r.copy()
+    bumped[7] = np.nextafter(bumped[7], 1.0)            # single-ULP flip
+    assert rank_digest(jnp.asarray(bumped)) != d0
+    swapped = r.copy()
+    swapped[[0, 1]] = swapped[[1, 0]]                   # position-weighted
+    assert rank_digest(jnp.asarray(swapped)) != d0
+
+
+# ---------------------------------------------------------------------------
+# invariant sentinel
+# ---------------------------------------------------------------------------
+
+def _good_ranks():
+    r = np.full(8, 1.0 / 8)
+    return jnp.asarray(r)
+
+
+def _observe(sent, ranks, delta=1e-12, iterations=5, affected=10,
+             fallback=False, gen=1):
+    return sent.observe(generation=gen, last_seq=gen, ranks=ranks,
+                        delta=delta, iterations=iterations,
+                        affected=affected, fallback=fallback)
+
+
+def test_sentinel_clean_batch_no_incidents():
+    sent = InvariantSentinel(clock=FakeClock())
+    digest, incs = _observe(sent, _good_ranks())
+    assert incs == []
+    assert digest == rank_digest(_good_ranks())
+    assert sent.gauges["sentinel_rank_mass_err"] < 1e-12
+    assert sent.gauges["sentinel_trips"] == 0.0
+
+
+@pytest.mark.parametrize("mutate,kind", [
+    (lambda r: r.at[0].multiply(3.0), "rank_mass"),
+    (lambda r: r.at[0].set(-r[0]).at[1].add(2 * r[0]), "rank_negative"),
+    (lambda r: r.at[0].set(jnp.nan), "rank_nonfinite"),
+])
+def test_sentinel_trips_on_invariant_violation(mutate, kind):
+    sent = InvariantSentinel(clock=FakeClock())
+    _, incs = _observe(sent, mutate(_good_ranks()))
+    assert [i.kind for i in incs] == [kind]
+    assert incs[0].severity == "error"
+    assert incs[0].generation == 1
+    d = incs[0].as_dict()           # JSON-able schema
+    json.dumps(d)
+    assert d["kind"] == kind
+
+
+def test_sentinel_trips_on_unconverged_residual():
+    sent = InvariantSentinel(SentinelConfig(residual_tol=1e-6),
+                             clock=FakeClock())
+    _, incs = _observe(sent, _good_ranks(), delta=1e-3)
+    assert [i.kind for i in incs] == ["residual"]
+
+
+def test_sentinel_anomaly_scores_after_warmup():
+    cfg = SentinelConfig(anomaly_warmup=8, anomaly_z=6.0)
+    sent = InvariantSentinel(cfg, clock=FakeClock())
+    for i in range(12):     # stable regime: 5 iterations, 10 affected
+        _, incs = _observe(sent, _good_ranks(), iterations=5,
+                           affected=10, gen=i)
+        assert incs == []
+    # a wild batch after warmup -> warn-severity anomaly incidents
+    _, incs = _observe(sent, _good_ranks(), iterations=500,
+                       affected=100000, gen=99)
+    kinds = {i.kind for i in incs}
+    assert kinds == {"anomaly_iterations", "anomaly_affected"}
+    assert all(i.severity == "warn" for i in incs)
+
+
+def test_sentinel_fallback_batches_skip_anomaly_scoring():
+    cfg = SentinelConfig(anomaly_warmup=2, anomaly_z=6.0)
+    sent = InvariantSentinel(cfg, clock=FakeClock())
+    for i in range(6):
+        _observe(sent, _good_ranks(), iterations=5, gen=i)
+    # fallback solves look nothing like the baseline, but must not trip
+    _, incs = _observe(sent, _good_ranks(), iterations=10000,
+                       affected=10**6, fallback=True, gen=7)
+    assert incs == []
+    assert sent.gauges["sentinel_anomaly_iterations_z"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# shadow verification
+# ---------------------------------------------------------------------------
+
+def test_shadow_sampling_cadence_and_clean_reports():
+    g = _graph()
+    ranks = static_pagerank(g).ranks
+    sv = ShadowVerifier(every=4, background=False)
+    taken = [sv.maybe_submit(i, i, g, ranks) for i in range(9)]
+    assert taken == [True, False, False, False] * 2 + [True]
+    assert sv.samples == 3
+    assert sv.take_incidents() == []
+    assert all(r.l1 < 1e-8 for r in sv.reports)
+    assert sv.gauges()["shadow_samples"] == 3.0
+
+
+def test_shadow_flags_divergent_snapshot():
+    g = _graph()
+    ranks = static_pagerank(g).ranks.at[0].multiply(2.0)
+    sv = ShadowVerifier(every=1, background=False)
+    sv.maybe_submit(5, 42, g, ranks)
+    incs = sv.take_incidents()
+    assert {i.kind for i in incs} == {"shadow_l1", "shadow_linf"}
+    assert all(i.generation == 5 and i.last_seq == 42 for i in incs)
+    assert sv.take_incidents() == []                   # drained
+
+
+def test_shadow_background_latest_wins():
+    g = _graph()
+    ranks = static_pagerank(g).ranks
+    sv = ShadowVerifier(every=1, background=True)
+    gate = threading.Event()
+    orig = sv._verify
+
+    def slow_verify(job):
+        assert gate.wait(10.0)
+        return orig(job)
+
+    sv._verify = slow_verify
+    try:
+        sv.maybe_submit(0, 0, g, ranks)
+        deadline = time.time() + 10.0
+        while not sv._busy and time.time() < deadline:
+            time.sleep(0.001)                          # worker picks job 0
+        assert sv._busy
+        sv.maybe_submit(1, 1, g, ranks)                # pending
+        sv.maybe_submit(2, 2, g, ranks)                # displaces gen 1
+        gate.set()
+        assert sv.flush(timeout=10.0)
+    finally:
+        gate.set()
+        sv.stop()
+    assert sv.samples == 2
+    assert sv.skipped == 1
+    assert [r.generation for r in sv.reports] == [0, 2]
+
+
+# ---------------------------------------------------------------------------
+# SLO burn rates
+# ---------------------------------------------------------------------------
+
+def test_slo_burn_rate_arithmetic():
+    clk = FakeClock()
+    t = SloTracker("latency", objective=0.9,       # budget = 0.1
+                   windows=((120.0, 2.0),), min_events=4, clock=clk)
+    for i in range(10):
+        clk.t = float(i)
+        t.record(good=(i % 2 == 0))                # 5 bad / 10 total
+    assert t.counts(120.0) == (10, 5)
+    assert t.burn_rate(120.0) == pytest.approx(5.0)  # 0.5 / 0.1
+    # both windows hot -> alert with the measured burns
+    alerts = t.evaluate()
+    assert len(alerts) == 1
+    a = alerts[0]
+    assert a.long_window_s == 120.0 and a.short_window_s == 10.0
+    assert a.burn_long == pytest.approx(5.0)
+    assert a.burn_short >= a.threshold
+
+
+def test_slo_short_window_resets_alert():
+    clk = FakeClock()
+    t = SloTracker("x", objective=0.9, windows=((120.0, 2.0),),
+                   min_events=4, clock=clk)
+    for i in range(8):
+        clk.t = float(i)
+        t.record(good=False)
+    assert t.evaluate()                            # burning
+    for i in range(20):                            # recover: all good
+        clk.t = 8.0 + i
+        t.record(good=True)
+    # long window still remembers the bad burst, short window is clean
+    assert t.burn_rate(120.0) > 2.0
+    assert t.burn_rate(10.0) == 0.0
+    assert t.evaluate() == []
+
+
+def test_slo_min_events_significance_gate():
+    clk = FakeClock()
+    t = SloTracker("x", objective=0.99, windows=((60.0, 2.0),),
+                   min_events=4, clock=clk)
+    for i in range(3):
+        clk.t = float(i)
+        t.record(good=False)                       # burn huge, n tiny
+    assert t.evaluate() == []                      # not significant yet
+    clk.t = 3.0
+    t.record(good=False)
+    assert t.evaluate()                            # 4th sample arms it
+
+
+def test_slo_set_alerts_are_edge_triggered():
+    clk = FakeClock()
+    s = SloSet.serving(windows=((60.0, 2.0),), min_events=4, clock=clk)
+    for i in range(6):
+        clk.t = float(i)
+        s.record("latency", good=False)
+        s.record("staleness", good=True)
+    assert len(s.evaluate()) == 1                  # fires once...
+    assert s.evaluate() == []                      # ...stays active, no re-fire
+    g = s.gauges()
+    assert g["slo_alerts_active"] == 1.0
+    assert g["slo_latency_bad_total"] == 6.0
+    assert g["slo_staleness_burn_60s"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# flight recorder: capture -> replay bit-for-bit
+# ---------------------------------------------------------------------------
+
+def _monitor(**over):
+    kw = dict(shadow_every=0, anchor_every=4, recorder_capacity=64)
+    kw.update(over)
+    return CorrectnessMonitor(MonitorConfig(**kw))
+
+
+@pytest.mark.parametrize("engine_kw", [
+    dict(),
+    dict(engine="kernel", kernel_opts=dict(use_kernel=False, be=32, vb=64)),
+], ids=["xla", "kernel"])
+def test_capture_then_replay_is_bitwise(engine_kw):
+    mon = _monitor()
+    ingest, store, engine, _ = _service(_graph(), monitor=mon, **engine_kw)
+    engine.bootstrap()
+    n = _feed(ingest, engine, num_batches=8)
+    assert n == 8 and len(mon.recorder) == 8
+    report = replay(mon.recorder)
+    assert report.anchor_generation == 0
+    assert len(report.steps) == 8
+    assert report.ok and report.num_bitwise == 8
+    assert "8/8 bit-for-bit" in report.describe()
+
+
+def test_replay_window_end_gen_trims_tail():
+    mon = _monitor()
+    ingest, store, engine, _ = _service(_graph(), monitor=mon)
+    engine.bootstrap()
+    _feed(ingest, engine, num_batches=6)
+    report = replay(mon.recorder, end_gen=3)
+    assert [s.generation for s in report.steps] == [1, 2, 3]
+    assert report.ok
+
+
+def test_recorder_anchor_gc_keeps_replay_covered():
+    mon = _monitor(recorder_capacity=6, anchor_every=2)
+    ingest, store, engine, _ = _service(_graph(), monitor=mon)
+    engine.bootstrap()
+    _feed(ingest, engine, num_batches=12)
+    rec = mon.recorder
+    assert len(rec) == 6                           # ring trimmed
+    oldest = rec.records[0].generation
+    # every surviving anchor is useful; at least one covers the ring head
+    assert min(rec.anchor_generations) <= oldest - 1
+    assert replay(rec).ok                          # still replayable
+
+
+def test_incident_bundle_roundtrip_with_injected_fault(tmp_path):
+    idir = str(tmp_path / "incidents")
+    mon = _monitor(incident_dir=idir, shadow_every=4,
+                   shadow_background=False)
+    ingest, store, engine, metrics = _service(_graph(), monitor=mon)
+    engine.bootstrap()
+    engine.inject_fault(3, kind="rank", vertex=0, scale=4.0)
+    _feed(ingest, engine, num_batches=8)
+    # the mass sentinel catches the corruption at the faulted generation
+    # itself -- far inside the 64-batch acceptance window
+    errors = [i for i in mon.incidents if i.severity == "error"]
+    assert errors and errors[0].generation == 3
+    assert errors[0].kind == "rank_mass"
+    assert engine.faults_injected == 1
+    assert metrics.as_dict()["faults_injected"] == 1.0
+    # auto-dumped bundle replays bit-for-bit, fault re-applied
+    assert mon.last_bundle == os.path.join(idir, "incident_gen00000003")
+    cfg, a, state, a_seq, records, incident = load_bundle(mon.last_bundle)
+    assert incident["kind"] == "rank_mass"
+    assert any(r.fault for r in records)
+    report = replay(mon.last_bundle)
+    assert report.ok and report.num_bitwise == len(report.steps)
+    # the CLI agrees (exit 0 on bitwise reproduction)
+    from repro.launch.replay import main as replay_main
+    out_json = str(tmp_path / "report.json")
+    assert replay_main([mon.last_bundle, "--strict",
+                        "--json", out_json]) == 0
+    with open(out_json) as f:
+        assert json.load(f)["ok"] is True
+
+
+def test_replay_refuses_unanchored_configs(tmp_path):
+    mon = _monitor()
+    ingest, store, engine, _ = _service(_graph(), monitor=mon)
+    engine.bootstrap()
+    _feed(ingest, engine, num_batches=2)
+    bundle = mon.recorder.dump(str(tmp_path / "b"))
+    man_path = os.path.join(bundle, "manifest.json")
+    with open(man_path) as f:
+        man = json.load(f)
+    for key in ("mesh", "ppr"):
+        man["config"][key] = True
+        with open(man_path, "w") as f:
+            json.dump(man, f)
+        with pytest.raises(NotImplementedError):
+            replay(bundle)
+        man["config"][key] = False
+
+
+# ---------------------------------------------------------------------------
+# monitor wiring: gauges + summary through the engine
+# ---------------------------------------------------------------------------
+
+def test_monitor_gauges_flow_into_serve_metrics():
+    mon = _monitor(shadow_every=2, shadow_background=False)
+    ingest, store, engine, metrics = _service(_graph(), monitor=mon)
+    engine.bootstrap()
+    _feed(ingest, engine, num_batches=5)
+    mon.close()
+    m = metrics.as_dict()
+    for key in ("sentinel_rank_mass_err", "sentinel_trips",
+                "shadow_samples", "shadow_l1", "slo_alerts_active",
+                "slo_latency_bad_total", "incidents_total"):
+        assert key in m, key
+    assert m["shadow_samples"] == 3.0              # batches 0, 2, 4
+    assert m["incidents_total"] == 0.0
+    s = mon.summary()
+    assert s["batches"] == 5 and s["incident_bundle"] is None
+    # the Prometheus surface renders the whole correctness plane
+    text = MetricsExporter(metrics).scrape()
+    assert "repro_shadow_l1" in text and "repro_sentinel_trips" in text
+
+
+# ---------------------------------------------------------------------------
+# export hardening: JSONL rotation, exporter lifecycle
+# ---------------------------------------------------------------------------
+
+def test_jsonl_sink_rotates_at_size_cap(tmp_path):
+    path = str(tmp_path / "telemetry.jsonl")
+    sink = JsonlSink(path, max_bytes=400, backups=2, clock=lambda: 1.0)
+    for i in range(40):
+        sink.write({"i": i, "pad": "x" * 32})
+    sink.close()
+    assert sink.rotations >= 2
+    assert os.path.exists(path + ".1") and os.path.exists(path + ".2")
+    assert not os.path.exists(path + ".3")         # backups capped
+    for p in (path, path + ".1", path + ".2"):
+        assert os.path.getsize(p) <= 400
+        with open(p) as f:                         # every line intact JSON
+            rows = [json.loads(line) for line in f]
+        assert all("i" in r for r in rows)
+
+
+def test_jsonl_sink_truncates_with_zero_backups(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    sink = JsonlSink(path, max_bytes=200, backups=0)
+    for i in range(20):
+        sink.write({"i": i})
+    sink.close()
+    assert sink.rotations >= 1
+    assert not os.path.exists(path + ".1")
+    sink.write({"late": True})                     # post-close: no-op
+    sink.close()                                   # idempotent
+
+
+def test_metrics_exporter_lifecycle():
+    exp = MetricsExporter(ServeMetrics())
+    port = exp.serve(port=0)
+    assert port > 0 and exp.port == port
+    with pytest.raises(RuntimeError):
+        exp.serve(port=0)                          # double-serve refused
+    exp.close()
+    assert exp.port is None
+    exp.close()                                    # idempotent
+    with exp:                                      # context manager re-serves
+        assert exp.serve(port=0) > 0
+    assert exp.port is None
