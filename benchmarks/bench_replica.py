@@ -1,0 +1,179 @@
+"""Replica-tier benchmark: open-loop Poisson query load under faults.
+
+One ``ServeEngine`` writer feeds N ``ReadReplica``s over a seeded
+``FaultyTransport`` that drops and reorders deltas, with a partition
+spell on one replica mid-run — the steady-state fault regime the
+replication tier is built for (serve/replicate.py).  Query traffic is
+**open-loop**: the number of queries arriving at each event offset is
+drawn up front from a seeded Poisson (it does not adapt to service
+latency, so the tail percentiles are honest), and each query is one of
+the three serve classes — point ranks, global top-k, personalized
+top-k — drawn from a fixed mix and round-robined across the replicas.
+
+Emitted rows (all registered with ``run.py --json``):
+
+    replica/<class>      p99.9 wall latency per query (the row value);
+                         p50/p99, sample count
+    replica/staleness    staleness-in-events percentiles (p50/p99/
+                         p99.9/max) over answered queries — answers
+                         carry staleness as metadata — plus the shed
+                         count from degraded replicas
+    replica/tier         us per event end-to-end; events/s, deltas
+                         applied, gaps/retries/resyncs, transport
+                         drop/reorder counters
+
+Shed queries (``ReplicaDegradedError`` while a replica is outside its
+staleness SLO with top-k/PPR shed) are *not* latency samples — the tier
+answered them instantly with a typed refusal carrying the staleness —
+so they are counted separately rather than polluting the percentiles.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.ft.elastic import ReplicaRoster
+from repro.graph.generators import rmat_edges
+from repro.graph.structure import from_coo
+from repro.serve import FaultyTransport, IngestQueue, LogicalClock, \
+    RankStore, ReadReplica, ReplicaDegradedError, ReplicaQueryClient, \
+    ReplicationWriter, ServeEngine, ServeMetrics
+
+# traffic mix: mostly point lookups, some top-k, a little exact PPR
+MIX = (("point", 0.6), ("top_k", 0.3), ("ppr", 0.1))
+
+
+def _pctl(xs, q) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def _run_tier(events: int = 480, num_replicas: int = 2, scale: int = 10,
+              edge_factor: int = 8, queries_per_event: float = 2.0,
+              drop_p: float = 0.05, reorder_p: float = 0.10,
+              staleness_slo_events: int = 64, flush_size: int = 16,
+              step_every: int = 16, hb_every: int = 8, dt: float = 0.01,
+              topk: int = 10, seed: int = 7) -> dict:
+    clock = LogicalClock()
+    transport = FaultyTransport(seed=seed + 1, drop_p=drop_p,
+                                reorder_p=reorder_p, reorder_window=4 * dt)
+    edges, n = rmat_edges(scale, edge_factor, seed=seed)
+    graph = from_coo(edges[:, 0], edges[:, 1], n,
+                     edge_capacity=len(edges) + 4 * events)
+    ingest = IngestQueue(flush_size=flush_size, flush_interval=0.0,
+                         max_pending=1 << 20, clock=clock)
+    engine = ServeEngine(graph, ingest, RankStore(), metrics=ServeMetrics(),
+                         method="frontier_prune", clock=clock)
+    engine.bootstrap()
+    writer = ReplicationWriter(engine, transport, anchor_every=8,
+                               clock=clock)
+    writer.attach()
+    transport.set_writer(writer)
+    roster = ReplicaRoster(heartbeat_timeout=64 * dt)
+    writer.heartbeat(roster)
+    replicas = [ReadReplica(f"r{i}", transport, n, roster=roster,
+                            staleness_slo_events=staleness_slo_events,
+                            max_retries=3, backoff_base=2 * dt,
+                            slo_windows=((2.0, 2.0),), slo_min_events=8,
+                            seed=seed, clock=clock)
+                for i in range(num_replicas)]
+    for r in replicas:
+        assert r.bootstrap(), "bootstrap against a healthy writer"
+    clients = [ReplicaQueryClient(r) for r in replicas]
+
+    rng = np.random.default_rng(seed)
+    # open-loop arrival schedule, fixed before the run starts
+    arrivals = rng.poisson(queries_per_event, size=events)
+    kinds = rng.choice([k for k, _ in MIX], size=int(arrivals.sum()),
+                       p=[p for _, p in MIX])
+    # partition one replica for the middle sixth of the feed: the tier
+    # keeps serving through it and the healed replica resyncs back
+    part_open, part_close = events // 3, events // 3 + events // 6
+
+    lat: dict = {k: [] for k, _ in MIX}
+    stale_samples: list = []
+    shed = 0
+    qi = 0
+    t0 = time.perf_counter()
+    for i in range(events):
+        clock.advance(dt)
+        if i == part_open:
+            transport.partition(replicas[-1].name)
+        elif i == part_close:
+            transport.heal(replicas[-1].name)
+        u, v = (int(x) for x in rng.integers(0, n, size=2))
+        if u != v:
+            ingest.submit_insert(u, v)
+        if (i + 1) % step_every == 0:
+            engine.step(force=True)
+        if (i + 1) % hb_every == 0:
+            writer.heartbeat(roster)
+        for r in replicas:
+            r.pump()
+        for _ in range(int(arrivals[i])):
+            kind = str(kinds[qi])
+            client = clients[qi % len(clients)]
+            qi += 1
+            tq = time.perf_counter()
+            try:
+                if kind == "point":
+                    res = client.get_ranks(rng.integers(0, n, size=4))
+                elif kind == "top_k":
+                    res = client.top_k(topk)
+                else:
+                    seeds = [int(x) for x in rng.integers(0, n, size=3)]
+                    res = client.personalized_top_k(seeds, topk)
+            except ReplicaDegradedError as e:
+                shed += 1
+                stale_samples.append(e.staleness_events)
+                continue
+            lat[kind].append(time.perf_counter() - tq)
+            stale_samples.append(res.staleness_events)
+    engine.drain()
+    wall = time.perf_counter() - t0
+    for r in replicas:
+        r.pump()
+    return dict(
+        wall=wall, events=events, lat=lat, stale=stale_samples, shed=shed,
+        deltas_applied=sum(r.deltas_applied for r in replicas),
+        gaps=sum(r.gaps_detected for r in replicas),
+        retries=sum(r.retries_sent for r in replicas),
+        resyncs=sum(r.resyncs for r in replicas),
+        dropped=transport.dropped, reordered=transport.reordered,
+        delivered=transport.delivered)
+
+
+def run(events: int = 480, num_replicas: int = 2,
+        queries_per_event: float = 2.0, drop_p: float = 0.05,
+        reorder_p: float = 0.10, seed: int = 7):
+    # warm pass compiles the step + query paths so the measured run's
+    # tail percentiles are steady-state service latency, not jit
+    _run_tier(events=64, num_replicas=num_replicas, drop_p=0.0,
+              reorder_p=0.0, queries_per_event=queries_per_event,
+              seed=seed)
+    r = _run_tier(events=events, num_replicas=num_replicas,
+                  queries_per_event=queries_per_event, drop_p=drop_p,
+                  reorder_p=reorder_p, seed=seed)
+    for kind, _ in MIX:
+        xs = r["lat"][kind]
+        emit(f"replica/{kind}", _pctl(xs, 99.9),
+             f"p50_us={_pctl(xs, 50) * 1e6:.1f};"
+             f"p99_us={_pctl(xs, 99) * 1e6:.1f};n={len(xs)}")
+    st = r["stale"]
+    # staleness is measured in events, not seconds: value column is 0
+    emit("replica/staleness", 0.0,
+         f"p50_ev={_pctl(st, 50):.0f};p99_ev={_pctl(st, 99):.0f};"
+         f"p999_ev={_pctl(st, 99.9):.0f};"
+         f"max_ev={max(st) if st else 0};shed={r['shed']}")
+    emit("replica/tier", r["wall"] / max(1, r["events"]),
+         f"events_per_s={r['events'] / r['wall']:.1f};"
+         f"replicas={num_replicas};queries={len(st) + r['shed']};"
+         f"deltas_applied={r['deltas_applied']};gaps={r['gaps']};"
+         f"retries={r['retries']};resyncs={r['resyncs']};"
+         f"dropped={r['dropped']};reordered={r['reordered']};"
+         f"delivered={r['delivered']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -25,8 +25,8 @@ def main(argv=None) -> None:
     from benchmarks import (bench_affected, bench_dynamic_stream,
                             bench_frontier_tolerance, bench_kernel,
                             bench_ppr, bench_prune_tolerance,
-                            bench_random_updates, bench_scaling,
-                            bench_serving, common)
+                            bench_random_updates, bench_replica,
+                            bench_scaling, bench_serving, common)
     print("name,us_per_call,derived")
     mods = [
         ("fig2_frontier_tolerance", bench_frontier_tolerance),
@@ -38,6 +38,7 @@ def main(argv=None) -> None:
         ("kernel_gated_spmv", bench_kernel),
         ("bench_serving", bench_serving),
         ("bench_ppr", bench_ppr),
+        ("bench_replica", bench_replica),
     ]
     for name, mod in mods:
         if args.only and args.only not in name:

@@ -124,8 +124,8 @@ if args.metrics_path:
     obs.MetricsExporter(metrics).write(args.metrics_path)
     print("metrics written to", args.metrics_path)
 
+engine.close()           # joins the shadow thread, flushes its mailbox
 if monitor is not None:
-    monitor.close()                      # drain the shadow thread
     s = monitor.summary()
     print(f"incidents detected: {s['incidents_total']} "
           f"{s['incidents_by_kind']}")

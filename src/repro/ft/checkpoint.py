@@ -4,11 +4,19 @@ Design (no external deps):
   * one ``.npy`` per leaf under ``<dir>/step_<N>.tmp/``, atomically renamed
     to ``step_<N>/`` after a manifest with the tree structure, shapes and
     dtypes is fsync'd — a torn write can never look like a checkpoint;
+  * every leaf's manifest entry carries a **content digest** (crc32 of the
+    raw bytes); ``restore`` recomputes and verifies it, so a leaf torn or
+    bit-flipped *after* the atomic rename (disk corruption, partial copy
+    of a checkpoint directory) raises a structured
+    ``CheckpointCorruptError`` instead of loading silently;
   * restore takes an *abstract* target pytree (+ optional sharding tree)
     and ``device_put``s each leaf, so a checkpoint written on one mesh
     restores onto ANY other mesh/device-count (elastic rescale,
     ft/elastic.py);
-  * ``keep_last`` garbage collection;
+  * ``keep_last`` garbage collection; ``restore_latest_valid`` walks the
+    retained steps newest-first and falls back past corrupt ones, so a
+    single bad checkpoint degrades recovery by one ``every`` interval
+    rather than killing the restart;
   * for the PageRank stream the state is (ranks, batch_index, rng_state) —
     restart replays the temporal stream from the last committed batch.
 """
@@ -17,6 +25,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -24,6 +33,20 @@ import jax.numpy as jnp
 import numpy as np
 
 _MANIFEST = "manifest.json"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint leaf failed its integrity check on restore.
+
+    ``step`` is the checkpoint step, ``leaf`` the manifest key of the
+    offending leaf (None when the manifest itself is unreadable).
+    """
+
+    def __init__(self, message: str, *, step: Optional[int] = None,
+                 leaf: Optional[str] = None):
+        super().__init__(message)
+        self.step = step
+        self.leaf = leaf
 
 
 def _leaf_paths(tree):
@@ -45,7 +68,8 @@ def save(directory: str, step: int, state: Any, keep_last: int = 3) -> str:
         np.save(os.path.join(tmp, fname), arr)
         manifest["leaves"].append(
             dict(key=name, file=fname, shape=list(arr.shape),
-                 dtype=str(arr.dtype)))
+                 dtype=str(arr.dtype),
+                 crc32=zlib.crc32(np.ascontiguousarray(arr).tobytes())))
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
         f.flush()
@@ -80,10 +104,19 @@ def restore(directory: str, step: int, target: Any,
     ``shardings``: optional matching pytree of NamedSharding — leaves are
     device_put with them (reshard-on-restore).  Shapes must match; dtypes
     are cast to the target's (e.g. f64 CPU ranks -> f32 TPU engine).
+
+    Every leaf whose manifest entry carries a ``crc32`` digest (all
+    checkpoints written by this module do) is verified against it before
+    anything is device_put; a mismatch, an unreadable ``.npy`` or an
+    unreadable manifest raises ``CheckpointCorruptError``.
     """
     path = os.path.join(directory, f"step_{step:010d}")
-    with open(os.path.join(path, _MANIFEST)) as f:
-        manifest = json.load(f)
+    try:
+        with open(os.path.join(path, _MANIFEST)) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"step {step}: unreadable manifest ({e})", step=step) from e
     leaves, treedef = jax.tree_util.tree_flatten(target)
     if len(leaves) != len(manifest["leaves"]):
         raise ValueError(
@@ -93,7 +126,20 @@ def restore(directory: str, step: int, target: Any,
                     if shardings is not None else [None] * len(leaves))
     out = []
     for leaf, rec, sh in zip(leaves, manifest["leaves"], shard_leaves):
-        arr = np.load(os.path.join(path, rec["file"]))
+        try:
+            arr = np.load(os.path.join(path, rec["file"]))
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptError(
+                f"step {step} leaf {rec['key']}: unreadable "
+                f"({rec['file']}: {e})", step=step, leaf=rec["key"]) from e
+        if "crc32" in rec:
+            got = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if got != rec["crc32"]:
+                raise CheckpointCorruptError(
+                    f"step {step} leaf {rec['key']}: content digest "
+                    f"{got:#010x} != manifest {rec['crc32']:#010x} "
+                    f"(torn or corrupt {rec['file']})",
+                    step=step, leaf=rec["key"])
         want_shape = tuple(leaf.shape)
         if tuple(arr.shape) != want_shape:
             raise ValueError(
@@ -103,6 +149,35 @@ def restore(directory: str, step: int, target: Any,
         out.append(jax.device_put(arr, sh) if sh is not None
                    else jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_latest_valid(directory: str, target: Any, shardings: Any = None
+                         ) -> tuple:
+    """(step, state) of the newest restorable checkpoint, or (None, None).
+
+    Walks the retained steps newest-first; a ``CheckpointCorruptError``
+    falls back to the previous ``keep_last`` step instead of propagating,
+    so one torn/corrupt checkpoint costs one save interval of progress
+    rather than the whole restart.  Raises only when every retained step
+    is corrupt — at that point there is genuinely nothing to restore
+    from, and silently cold-starting would hide the corruption.
+    """
+    if not os.path.isdir(directory):
+        return None, None
+    steps = sorted((int(d.split("_")[1]) for d in os.listdir(directory)
+                    if d.startswith("step_") and not d.endswith(".tmp")
+                    and os.path.exists(os.path.join(directory, d,
+                                                    _MANIFEST))),
+                   reverse=True)
+    last_err: Optional[CheckpointCorruptError] = None
+    for step in steps:
+        try:
+            return step, restore(directory, step, target, shardings)
+        except CheckpointCorruptError as e:
+            last_err = e
+    if last_err is not None:
+        raise last_err
+    return None, None
 
 
 class CheckpointManager:
@@ -120,7 +195,6 @@ class CheckpointManager:
         return None
 
     def restore_latest(self, target: Any, shardings: Any = None):
-        step = latest_step(self.directory)
-        if step is None:
-            return None, None
-        return step, restore(self.directory, step, target, shardings)
+        """Newest restorable (step, state); corrupt steps fall back to
+        the previous retained one (``restore_latest_valid``)."""
+        return restore_latest_valid(self.directory, target, shardings)

@@ -1,4 +1,4 @@
-"""Elastic rescaling: resume any checkpoint onto a different mesh.
+"""Elastic rescaling + replica membership.
 
 Two ingredients make rescale a pure data movement, no retraining logic:
   * checkpoints are mesh-agnostic host arrays (ft/checkpoint.py);
@@ -7,11 +7,20 @@ Two ingredients make rescale a pure data movement, no retraining logic:
     re-running ``partition_graph`` and ``device_put``-ing the same ranks.
 
 ``rescale_pagerank_state`` is the paper-workload path; ``rescale_state``
-is the generic (LM/GNN/recsys) path used by launch/train.py on restart.
+is the generic (LM/GNN/recsys) path used by launch/train.py on restart;
+``rescale_serving_state`` restores the serving checkpoint layout written
+by ``serve.state.RankStore`` (ranks, generation, last_seq) onto any mesh.
+
+``ReplicaRoster`` is the membership half of elasticity for the
+read-replica serving tier (serve/replicate.py): replicas join and leave
+at any time, liveness is heartbeat-based against an injected clock, and
+the roster answers "who is alive right now" for retransmission fan-out
+and writer-failover candidate selection.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+import threading
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -54,3 +63,77 @@ def rescale_pagerank_state(directory: str, graph: EdgeListGraph, mesh,
     )
     state = ckpt.restore(directory, step, target)
     return int(state["batch_idx"]), np.asarray(state["ranks"]), part
+
+
+def rescale_serving_state(directory: str, num_vertices: int,
+                          dtype=np.float64):
+    """Restore a ``RankStore`` checkpoint onto any device count.
+
+    The serving checkpoint layout is (ranks f64[V], generation, last_seq)
+    — mesh-agnostic host arrays, so "rescale" is just restoring them and
+    re-bootstrapping a ``ServeEngine`` on whatever mesh the new process
+    has (the packed/sharded device state is rebuilt from the replayed
+    graph at bootstrap, same as a restart on the original mesh).
+
+    Returns (generation, last_seq, ranks_host) or (None, None, None)
+    when no restorable checkpoint exists.  Corrupt checkpoints fall back
+    to the previous retained step (``ckpt.restore_latest_valid``).
+    """
+    target = dict(
+        ranks=jax.ShapeDtypeStruct((num_vertices,), dtype),
+        generation=jax.ShapeDtypeStruct((), np.int64),
+        last_seq=jax.ShapeDtypeStruct((), np.int64))
+    step, state = ckpt.restore_latest_valid(directory, target)
+    if state is None:
+        return None, None, None
+    return (int(state["generation"]), int(state["last_seq"]),
+            np.asarray(state["ranks"]))
+
+
+class ReplicaRoster:
+    """Heartbeat-based membership for the read-replica tier.
+
+    Thread-safe: replicas join/leave/beat from their own pump threads
+    while the failover controller reads liveness.  Time is an injected
+    monotone clock reading passed by the caller, so the chaos harness
+    can drive membership on a logical clock deterministically.
+    """
+
+    def __init__(self, heartbeat_timeout: float = 1.0):
+        self.heartbeat_timeout = heartbeat_timeout
+        self._lock = threading.Lock()
+        self._last_beat: Dict[str, float] = {}
+        self.joins = 0
+        self.leaves = 0
+
+    def join(self, name: str, now: float) -> None:
+        with self._lock:
+            if name not in self._last_beat:
+                self.joins += 1
+            self._last_beat[name] = now
+
+    def leave(self, name: str) -> None:
+        with self._lock:
+            if self._last_beat.pop(name, None) is not None:
+                self.leaves += 1
+
+    def beat(self, name: str, now: float) -> None:
+        with self._lock:
+            if name not in self._last_beat:
+                self.joins += 1
+            self._last_beat[name] = now
+
+    def members(self) -> List[str]:
+        with self._lock:
+            return sorted(self._last_beat)
+
+    def alive(self, now: float) -> List[str]:
+        """Members whose last beat is within the heartbeat timeout."""
+        with self._lock:
+            return sorted(n for n, t in self._last_beat.items()
+                          if now - t <= self.heartbeat_timeout)
+
+    def is_alive(self, name: str, now: float) -> bool:
+        with self._lock:
+            t = self._last_beat.get(name)
+        return t is not None and now - t <= self.heartbeat_timeout

@@ -218,8 +218,8 @@ def main(argv=None):
                   f"{ppr_note}", flush=True)
     engine.drain()
     wall = time.perf_counter() - t0
+    engine.close()   # joins the shadow thread, flushes its mailbox
     if monitor is not None:
-        monitor.close()                    # drain the shadow thread
         print("monitor " + json.dumps(monitor.summary()))
         if incident_sink is not None:
             incident_sink.close()

@@ -195,13 +195,26 @@ class ShadowVerifier:
                 self._cond.wait(timeout=left)
         return True
 
-    def stop(self, timeout: Optional[float] = 30.0):
-        """Finish any in-flight sample, then stop the worker thread."""
+    def stop(self, timeout: Optional[float] = None):
+        """Drain the mailbox, finish in-flight work, join the thread.
+
+        The worker loop only exits once ``_stopping`` is set AND the
+        mailbox is empty, so a sample submitted just before shutdown is
+        still verified (and its incidents recorded) before the join
+        returns — a pending divergence is reported, never dropped.  The
+        default join is unbounded: an abandoned daemon thread would die
+        mid-solve at interpreter exit, which is exactly the silent-drop
+        this guards against; pass ``timeout`` only if the caller can
+        tolerate that.  Idempotent.
+        """
         if self._thread is None:
             return
-        self.flush(timeout=timeout)
         with self._cond:
             self._stopping = True
             self._cond.notify_all()
         self._thread.join(timeout=timeout)
+        if self._thread.is_alive():
+            raise RuntimeError(
+                "shadow-verifier thread did not drain within "
+                f"{timeout}s; a pending sample may be unreported")
         self._thread = None

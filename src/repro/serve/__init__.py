@@ -12,16 +12,23 @@ personalized top-k with index/exact routing (``query``) — and per-batch
 latency/freshness/work counters (``metrics``).  See DESIGN.md §5 for
 the architecture and §6 for the walk index.
 """
+from repro.serve.chaos import ChaosHarness, ChaosReport, FaultyTransport, \
+    LinkDown, LogicalClock, parse_schedule
 from repro.serve.engine import ServeEngine
 from repro.serve.ingest import CoalescedBatch, EdgeEvent, IngestQueue, \
     coalesce_events
 from repro.serve.metrics import ServeMetrics
 from repro.serve.query import QueryClient
 from repro.serve.replay import preload_graph_and_feed
+from repro.serve.replicate import FailoverController, ReadReplica, \
+    ReplicaDegradedError, ReplicaQueryClient, ReplicationWriter
 from repro.serve.state import RankStore, Snapshot
 
 __all__ = [
-    "CoalescedBatch", "EdgeEvent", "IngestQueue", "coalesce_events",
-    "QueryClient", "RankStore", "ServeEngine", "ServeMetrics", "Snapshot",
-    "preload_graph_and_feed",
+    "ChaosHarness", "ChaosReport", "CoalescedBatch", "EdgeEvent",
+    "FailoverController", "FaultyTransport", "IngestQueue", "LinkDown",
+    "LogicalClock", "QueryClient", "RankStore", "ReadReplica",
+    "ReplicaDegradedError", "ReplicaQueryClient", "ReplicationWriter",
+    "ServeEngine", "ServeMetrics", "Snapshot", "coalesce_events",
+    "parse_schedule", "preload_graph_and_feed",
 ]

@@ -72,6 +72,26 @@ into correctness observability: per-batch invariant sentinels, sampled
 shadow verification, flight recording with bit-for-bit replay, and SLO
 burn-rate alerts (DESIGN.md §12).  ``inject_fault`` arms a one-shot
 debug corruption so that pipeline can be exercised end-to-end.
+
+``iteration_budget=`` (an ``ft.straggler.IterationBudget`` or an int
+``max_iter_per_batch``) caps each dynamic batch's solver iterations so
+one pathological micro-batch cannot stall the publish cadence: a solve
+that exits at the cap carries its unconverged frontier into the next
+batch's seed set (sound for DF/DF-P — vertices re-mark until Δ ≤ τ,
+DESIGN.md §13), and ``metrics.budget_carryover`` counts the batches
+that started from a carried frontier.  Bootstrap and explicit static
+solves are never capped — a cold start wants full convergence.
+
+``on_publish`` (assignable attribute, like ``telemetry_sink``) is
+called after every post-batch snapshot publish with ``(snapshot,
+batch)`` — the hook the replication writer (serve/replicate.py) uses to
+emit generation-stamped deltas without the engine knowing about
+replication.
+
+``close()`` shuts the engine down completely: stops the background step
+thread if one is running and closes the correctness monitor, which
+joins the shadow-verifier thread and flushes its latest-wins mailbox so
+a pending divergence is reported rather than dropped on exit.
 """
 from __future__ import annotations
 
@@ -117,7 +137,7 @@ class ServeEngine:
                  static_fallback_frac: float = 0.25,
                  ppr_index=None, clock=time.monotonic,
                  telemetry: Optional[bool] = None, monitor=None,
-                 **pr_kw):
+                 iteration_budget=None, **pr_kw):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}; options {ENGINES}")
         self.ingest = ingest
@@ -172,6 +192,15 @@ class ServeEngine:
         # correctness monitor (obs.monitor.CorrectnessMonitor): hooked
         # after bootstrap and after every publish; None = zero overhead
         self.monitor = monitor
+        # per-batch iteration cap with frontier carryover
+        # (ft.straggler.IterationBudget); an int means max_iter_per_batch
+        if isinstance(iteration_budget, int):
+            from repro.ft.straggler import IterationBudget
+            iteration_budget = IterationBudget(iteration_budget)
+        self._budget = iteration_budget
+        # post-publish hook (snapshot, batch) for the replication writer
+        self.on_publish = None
+        self._closed = False
         # one-shot debug fault armed by inject_fault(); applied (and
         # cleared) by the step that publishes the chosen generation
         self._fault: Optional[dict] = None
@@ -315,6 +344,13 @@ class ServeEngine:
         method = self.method
         init_state = build_initial_state(self._graph, graph_new,
                                          batch.update, self._ranks, method)
+        if (self._budget is not None and method in DYNAMIC_METHODS
+                and self._budget.carried_frontier is not None):
+            # a capped previous batch left an unconverged frontier: fold
+            # it into this batch's seed set (DF re-marks until Δ ≤ τ)
+            seeds = self._budget.seeds_for_batch(np.asarray(init_state[1]))
+            init_state = (init_state[0], jnp.asarray(seeds))
+            self.metrics.record_budget_carryover()
         affected = init_state[1]
         fallback = False
         if method in ("traversal", "frontier", "frontier_prune"):
@@ -324,6 +360,13 @@ class ServeEngine:
                 init_state = build_initial_state(
                     self._graph, graph_new, batch.update, self._ranks,
                     "static")
+        # budget cap applies to dynamic solves only: a capped static
+        # solve restarts cold every batch and would never converge,
+        # while a capped DF/DF-P batch soundly resumes from its carried
+        # frontier (straggler.IterationBudget)
+        cap = (self._budget.max_iter
+               if self._budget is not None and method in DYNAMIC_METHODS
+               else None)
         # the fused path folds packed maintenance into the solve's first
         # sweep — one device program for the whole f32 phase
         fuse = (self._packed is not None and not fallback
@@ -361,6 +404,8 @@ class ServeEngine:
             from repro.core.kernel_engine import fused_hybrid_pagerank
             kw = dict(KERNEL_FLAGS[method], **self._kernel_kw, **self.pr_kw)
             kw.setdefault("telemetry", tel)
+            if cap is not None:
+                kw["max_iter"] = cap
             try:
                 self._packed, res = fused_hybrid_pagerank(
                     graph_new, self._packed, batch.update, *init_state,
@@ -381,7 +426,8 @@ class ServeEngine:
             with tr.span("solve", method=method, engine=self.engine):
                 res = self._solve(method, graph_new, batch.update,
                                   self._ranks, graph_prev=self._graph,
-                                  init_state=init_state, telemetry=tel)
+                                  init_state=init_state, telemetry=tel,
+                                  max_iter=cap)
                 tr.sync(res.ranks)
             if self.engine == "kernel" and self.mesh is None \
                     and method in DYNAMIC_METHODS:
@@ -389,6 +435,18 @@ class ServeEngine:
                                  else 0)
             else:
                 programs += 1   # one XLA solve (mesh paths count theirs)
+        if self._budget is not None:
+            if cap is not None:
+                # exit-at-cap with Δ still above τ means unconverged:
+                # the ever-affected set is the frontier to re-seed
+                tol = float(self.pr_kw.get("tol", pr.TOL))
+                converged = (int(res.iterations) < cap
+                             or float(res.delta) <= tol)
+                self._budget.after_batch(converged,
+                                         np.asarray(res.affected_ever))
+            else:
+                # static fallback ran uncapped to full convergence
+                self._budget.after_batch(True, None)
         if fault is not None and fault["kind"] == "rank":
             res = res._replace(
                 ranks=res.ranks.at[fault["vertex"]].multiply(
@@ -411,6 +469,8 @@ class ServeEngine:
         with tr.span("snapshot.publish"):
             self.store.publish(graph_new, res.ranks, batch.last_seq,
                                ppr_index=self._ppr)
+        if self.on_publish is not None:
+            self.on_publish(self.store.snapshot(), batch)
         comm = 0
         if self._sharded is not None:
             comm = int(getattr(self._sharded, "last_comm_bytes", 0))
@@ -488,8 +548,11 @@ class ServeEngine:
 
     def _solve(self, method: Method, graph_new: EdgeListGraph, update,
                prev_ranks, graph_prev: Optional[EdgeListGraph] = None,
-               init_state: Optional[tuple] = None, telemetry: bool = False):
+               init_state: Optional[tuple] = None, telemetry: bool = False,
+               max_iter: Optional[int] = None):
         graph_prev = graph_prev if graph_prev is not None else graph_new
+        # budget cap (constant across batches, so one trace variant)
+        capkw = {} if max_iter is None else dict(max_iter=max_iter)
         if self.mesh is not None:
             if self._sharded is not None and method in DYNAMIC_METHODS:
                 init_ranks, init_affected = (
@@ -500,23 +563,24 @@ class ServeEngine:
                                            init_affected,
                                            telemetry=telemetry,
                                            **KERNEL_FLAGS[method],
-                                           **self.pr_kw)
+                                           **{**self.pr_kw, **capkw})
             # the XLA shard_map step exposes endpoint scalars only —
             # per-iteration rows would ride the wire every sweep
             return distributed_pagerank(graph_prev, graph_new, update,
                                         prev_ranks, method, self.mesh,
                                         init_state=init_state,
-                                        **self.pr_kw)
+                                        **{**self.pr_kw, **capkw})
         init_ranks, init_affected = (
             init_state if init_state is not None else build_initial_state(
                 graph_prev, graph_new, update, prev_ranks, method))
         if self.engine == "kernel" and method in DYNAMIC_METHODS:
             from repro.core.kernel_engine import hybrid_pagerank
-            kw = dict(KERNEL_FLAGS[method], **self._kernel_kw, **self.pr_kw)
+            kw = dict(KERNEL_FLAGS[method], **self._kernel_kw,
+                      **self.pr_kw, **capkw)
             kw.setdefault("telemetry", telemetry)
             return hybrid_pagerank(graph_new, self._packed, init_ranks,
                                    init_affected, **kw)
-        kw = dict(LOOP_FLAGS[method], **self.pr_kw)
+        kw = dict(LOOP_FLAGS[method], **self.pr_kw, **capkw)
         kw.setdefault("telemetry", telemetry)
         return pr._pagerank_loop(graph_new, init_ranks, init_affected, **kw)
 
@@ -551,3 +615,16 @@ class ServeEngine:
         self._thread = None
         if drain:
             self.drain(force=True)
+
+    def close(self):
+        """Full shutdown: stop the step thread (without force-draining a
+        shedding queue) and close the correctness monitor, which joins
+        the shadow-verifier thread and flushes its latest-wins mailbox
+        so a pending divergence is reported, never dropped.  Idempotent.
+        """
+        if self._closed:
+            return
+        self._closed = True
+        self.stop(drain=False)
+        if self.monitor is not None:
+            self.monitor.close()

@@ -53,6 +53,7 @@ class ServeMetrics:
         self.events_applied = 0
         self.events_coalesced = 0
         self.static_fallbacks = 0
+        self.budget_carryover = 0   # batches seeded with a carried frontier
         self.walks_resampled = 0
         self.packed_rebuilds = 0   # kernel engine spill-overflow repacks
         self.packed_rebuilds_by_shard: Counter = Counter()
@@ -114,6 +115,11 @@ class ServeMetrics:
         for s in shards or ():
             self.packed_rebuilds_by_shard[int(s)] += 1
 
+    def record_budget_carryover(self):
+        """One batch whose seed set folded in an unconverged frontier
+        carried from a budget-capped previous batch."""
+        self.budget_carryover += 1
+
     def record_query(self, staleness_events: int):
         self.queries_served += 1
         self.query_staleness.append(int(staleness_events))
@@ -149,6 +155,7 @@ class ServeMetrics:
             iterations_mean=(float(np.mean(self.batch_iterations))
                              if self.batch_iterations else 0.0),
             static_fallbacks=self.static_fallbacks,
+            budget_carryover=self.budget_carryover,
             walks_resampled=self.walks_resampled,
             edges_processed=self.edges_processed,
             vertices_processed=self.vertices_processed,

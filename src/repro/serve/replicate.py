@@ -1,0 +1,648 @@
+"""Read-replica replication: one writer, N replicas, bounded staleness.
+
+The paper's DF-P property — a batch update perturbs only the affected
+vertex set — makes a published generation differ from its predecessor
+by a tiny sparse rank delta, which is what makes this tier cheap: the
+writer (the existing ``ServeEngine``, hooked via ``on_publish``) emits
+one generation-stamped ``DeltaMsg`` per publish carrying
+
+  * the exact sparse rank delta — indices where the new f64 rank vector
+    differs bitwise from the previous one, plus the new values;
+  * the coalesced ``BatchUpdate`` leaves (host copies), so replicas
+    maintain their own graph with the same ``apply_batch`` the writer
+    ran — replica state is writer state, reproduced;
+  * the wire header: ``epoch`` (increments on writer failover), ``seq``
+    (contiguous per epoch from 0), ``generation`` and ``last_seq`` (the
+    serving clocks of state.py).
+
+PPR replication rides the same stream: walk-index sampling is a pure
+function of (graph, config seed), so a replica configured with the
+writer's ``IndexConfig`` repairs its index from each delta's touched
+set (``repair_walk_index``) and stays bit-identical to the writer's
+without any walk data on the wire (DESIGN.md §6 determinism contract).
+
+Periodic full-state **anchors** reuse the flight-recorder anchor format
+(obs/recorder.py: ``ranks`` + ``graph_*`` host arrays): a late joiner
+bootstraps from the newest anchor plus the replayed delta tail, and a
+replica that exhausts its retry budget resyncs the same way.
+
+Fault tolerance (the reason this module exists):
+
+  * **gap detection** — deltas apply strictly in seq order; a gap
+    (buffered out-of-order delivery, or a heartbeat showing the writer
+    is ahead) triggers bounded-retry retransmission with exponential
+    backoff + deterministic jitter, then an anchor resync on give-up;
+  * **heartbeat failover** — ``FailoverController`` watches the
+    writer's beats in the ``ft.elastic.ReplicaRoster``; on expiry it
+    promotes the freshest state among (alive replicas, last committed
+    RankStore checkpoint), so no committed generation is ever lost,
+    bumps the epoch, and the new writer's bootstrap anchor forces the
+    surviving replicas to converge on it;
+  * **graceful degradation** — a replica whose staleness-in-events
+    exceeds its SLO marks itself degraded: point queries keep working
+    (answers always carry ``staleness_events``), top-k/PPR are
+    optionally shed (``shed_on_degrade``), an ``obs.slo.SloTracker``
+    burns the staleness error budget and emits ``slo_burn`` incidents
+    through the same ``Incident`` schema the monitor uses.
+
+Transport is injected (``serve.chaos.FaultyTransport`` in tests, or
+anything with the same ``broadcast``/``send``/``deliver``/``check_link``
+surface); time is an injected clock, so every retry/backoff/failover
+decision is deterministic under the chaos harness.
+"""
+from __future__ import annotations
+
+import time
+import zlib
+from typing import Dict, List, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ft.elastic import ReplicaRoster, rescale_serving_state
+from repro.graph.dynamic import BatchUpdate, apply_batch, \
+    touched_vertices_mask
+from repro.graph.structure import EdgeListGraph
+from repro.obs.sentinel import WARN, Incident
+from repro.obs.slo import SloTracker
+from repro.ppr import IndexConfig, build_walk_index, repair_walk_index
+from repro.serve.query import QueryClient, QueryResult
+from repro.serve.state import RankStore
+
+__all__ = [
+    "AnchorMsg", "DeltaMsg", "FailoverController", "Heartbeat",
+    "ReadReplica", "ReplicaDegradedError", "ReplicaQueryClient",
+    "ReplicationWriter",
+]
+
+
+# ---- wire format ---------------------------------------------------------
+
+class DeltaMsg(NamedTuple):
+    """One publish, as shipped: sparse rank delta + the update itself."""
+    epoch: int           # writer incarnation; bumps on failover
+    seq: int             # contiguous per epoch, from 0
+    generation: int      # snapshot generation this delta produces
+    last_seq: int        # newest ingest event folded into `generation`
+    rank_idx: np.ndarray  # int64[k] vertices whose rank changed
+    rank_val: np.ndarray  # f64[k] their new ranks (exact, bitwise)
+    update: Dict[str, np.ndarray]   # BatchUpdate leaves, host copies
+
+
+class AnchorMsg(NamedTuple):
+    """Full state at a generation, flight-recorder anchor format."""
+    epoch: int
+    seq: int             # deltas <= seq are folded in (-1: none yet)
+    generation: int
+    last_seq: int
+    state: Dict[str, np.ndarray]   # ranks + graph_* (obs/recorder.py)
+
+
+class Heartbeat(NamedTuple):
+    epoch: int
+    seq: int             # last delta seq emitted this epoch (-1: none)
+    generation: int
+    latest_seq: int      # writer ingest frontier (staleness reference)
+    t: float
+
+
+def _anchor_state(graph: EdgeListGraph, ranks) -> Dict[str, np.ndarray]:
+    """Host-side anchor, same leaves as FlightRecorder.record_anchor."""
+    return dict(
+        ranks=np.asarray(ranks),
+        graph_src=np.asarray(graph.src),
+        graph_dst=np.asarray(graph.dst),
+        graph_valid=np.asarray(graph.valid),
+        graph_num_edges=np.asarray(graph.num_edges),
+    )
+
+
+def _graph_from_anchor(state: Dict[str, np.ndarray],
+                       num_vertices: int) -> EdgeListGraph:
+    return EdgeListGraph(
+        src=jnp.asarray(state["graph_src"]),
+        dst=jnp.asarray(state["graph_dst"]),
+        valid=jnp.asarray(state["graph_valid"]),
+        num_vertices=num_vertices,
+        num_edges=jnp.asarray(state["graph_num_edges"]))
+
+
+# ---- writer side ---------------------------------------------------------
+
+class ReplicationWriter:
+    """Hooks a bootstrapped ``ServeEngine``; emits deltas + anchors.
+
+    The engine stays oblivious: ``attach`` assigns ``engine.on_publish``
+    and keeps a host copy of the previous rank vector for the exact
+    bitwise diff.  A bounded delta log (newest ``log_capacity`` entries)
+    serves retransmit requests and late-joiner tails; anything older
+    answers with the newest anchor instead.
+    """
+
+    def __init__(self, engine, transport, name: str = "writer",
+                 epoch: int = 0, anchor_every: int = 32,
+                 log_capacity: int = 512, clock=time.monotonic):
+        self.engine = engine
+        self.transport = transport
+        self.name = name
+        self.epoch = int(epoch)
+        self.anchor_every = int(anchor_every)
+        self.log_capacity = int(log_capacity)
+        self._clock = clock
+        self._log: Dict[int, DeltaMsg] = {}
+        self._anchor: Optional[AnchorMsg] = None
+        self._prev: Optional[np.ndarray] = None
+        self.next_seq = 0
+        self.alive = True
+        self.deltas_emitted = 0
+        self.anchors_taken = 0
+        self.retransmits = 0
+        transport.register(name)
+
+    # -- lifecycle --
+    def attach(self) -> None:
+        """Anchor the engine's current snapshot and start emitting."""
+        snap = self.engine.store.snapshot()
+        self._prev = np.asarray(snap.ranks)
+        self._anchor = AnchorMsg(
+            self.epoch, self.next_seq - 1, snap.generation, snap.last_seq,
+            _anchor_state(snap.graph, snap.ranks))
+        self.anchors_taken += 1
+        self.engine.on_publish = self._on_publish
+
+    def kill(self) -> None:
+        """Chaos: the writer process dies mid-flight — no more deltas,
+        no more heartbeats, control-plane calls fail."""
+        self.alive = False
+        self.engine.on_publish = None
+
+    # -- data plane --
+    def _on_publish(self, snap, batch) -> None:
+        if not self.alive:
+            return
+        new = np.asarray(snap.ranks)
+        idx = np.flatnonzero(new != self._prev)
+        upd = {f: np.asarray(getattr(batch.update, f))
+               for f in BatchUpdate._fields}
+        msg = DeltaMsg(self.epoch, self.next_seq, snap.generation,
+                       int(batch.last_seq), idx.astype(np.int64),
+                       new[idx].copy(), upd)
+        self._prev = new
+        self._log[msg.seq] = msg
+        if len(self._log) > self.log_capacity:
+            del self._log[min(self._log)]
+        self.next_seq += 1
+        self.deltas_emitted += 1
+        if snap.generation % self.anchor_every == 0:
+            self._anchor = AnchorMsg(self.epoch, msg.seq, snap.generation,
+                                     msg.last_seq,
+                                     _anchor_state(snap.graph, snap.ranks))
+            self.anchors_taken += 1
+        self.transport.broadcast(self.name, msg, self._clock())
+
+    def heartbeat(self, roster: Optional[ReplicaRoster] = None) -> None:
+        if not self.alive:
+            return
+        now = self._clock()
+        if roster is not None:
+            roster.beat(self.name, now)
+        self.transport.broadcast(
+            self.name,
+            Heartbeat(self.epoch, self.next_seq - 1,
+                      self.engine.store.generation,
+                      self.engine.ingest.latest_seq, now),
+            now)
+
+    # -- control plane (replicas call these through transport.check_link;
+    #    a dead writer or a partitioned link raises there) --
+    def retransmit(self, dest: str, seqs: List[int]) -> bool:
+        """Re-send the requested deltas to ``dest``; False when any has
+        fallen off the log (the replica must anchor-resync instead)."""
+        if not all(s in self._log for s in seqs):
+            return False
+        now = self._clock()
+        for s in seqs:
+            self.transport.send(self.name, dest, self._log[s], now)
+            self.retransmits += 1
+        return True
+
+    def newest_anchor(self) -> AnchorMsg:
+        assert self._anchor is not None, "attach() before serving anchors"
+        return self._anchor
+
+    def delta_tail(self, after_seq: int) -> List[DeltaMsg]:
+        """Logged deltas with seq > after_seq, in order (anchor resync +
+        late-joiner bootstrap tail)."""
+        return [self._log[s] for s in sorted(self._log)
+                if s > after_seq]
+
+
+# ---- replica side --------------------------------------------------------
+
+class ReplicaDegradedError(RuntimeError):
+    """Raised by shed query classes on a degraded replica; carries the
+    current ``staleness_events`` so clients can fail over informed."""
+
+    def __init__(self, message: str, staleness_events: int):
+        super().__init__(message)
+        self.staleness_events = staleness_events
+
+
+class ReadReplica:
+    """Applies the delta stream; answers queries; degrades, never dies.
+
+    Deltas apply strictly in seq order.  Out-of-order arrivals buffer;
+    a gap opens the retry state machine: up to ``max_retries``
+    retransmit requests with exponential backoff (``backoff_base`` ·
+    2^attempt + deterministic jitter), then an anchor resync.  An epoch
+    bump (new writer) always resyncs — the new writer's bootstrap
+    anchor is the one state everyone agrees on.
+    """
+
+    def __init__(self, name: str, transport, num_vertices: int,
+                 roster: Optional[ReplicaRoster] = None,
+                 ppr_cfg: Optional[IndexConfig] = None,
+                 staleness_slo_events: int = 256,
+                 shed_on_degrade: bool = True,
+                 max_retries: int = 4, backoff_base: float = 0.05,
+                 slo_objective: float = 0.99,
+                 slo_windows=((60.0, 14.4), (300.0, 6.0)),
+                 slo_min_events: int = 12,
+                 seed: int = 0, clock=time.monotonic):
+        self.name = name
+        self.transport = transport
+        self.num_vertices = int(num_vertices)
+        self.roster = roster
+        self.ppr_cfg = ppr_cfg
+        self.staleness_slo_events = int(staleness_slo_events)
+        self.shed_on_degrade = bool(shed_on_degrade)
+        self.max_retries = int(max_retries)
+        self.backoff_base = float(backoff_base)
+        self._clock = clock
+        # deterministic per-replica jitter: seed ⊕ stable name digest
+        self._rng = np.random.default_rng(
+            np.uint32(seed) ^ np.uint32(zlib.crc32(name.encode())))
+        self.store = RankStore()
+        self.graph: Optional[EdgeListGraph] = None
+        self.ranks: Optional[np.ndarray] = None
+        self.ppr = None
+        self.epoch = -1          # resyncs on the first message seen
+        self.applied_seq = -1    # newest contiguously-applied wire seq
+        self.generation = -1
+        self.last_seq = -1
+        self.known_latest_seq = -1   # writer ingest frontier, via hb/deltas
+        self.degraded = False
+        self._buffer: Dict[int, DeltaMsg] = {}
+        # gap retry state: None or dict(missing, attempt, next_t)
+        self._gap: Optional[dict] = None
+        self.incidents: List[Incident] = []
+        self.slo = SloTracker("replica_staleness", slo_objective,
+                              windows=slo_windows,
+                              min_events=slo_min_events, clock=clock)
+        self._active_alerts: set = set()   # edge-triggered slo_burn
+        # counters (surfaced by the harness / bench report)
+        self.deltas_applied = 0
+        self.duplicates = 0
+        self.gaps_detected = 0
+        self.retries_sent = 0
+        self.resyncs = 0
+        transport.register(name)
+        if roster is not None:
+            roster.join(name, clock())
+
+    # -- bookkeeping --
+    @property
+    def staleness(self) -> int:
+        return max(0, self.known_latest_seq - self.last_seq)
+
+    def _incident(self, kind: str, value: float, threshold: float,
+                  message: str) -> None:
+        self.incidents.append(Incident(
+            kind, WARN, self.generation, self.last_seq, float(value),
+            float(threshold), message, self._clock()))
+
+    def _note_frontier(self, latest_seq: int) -> None:
+        self.known_latest_seq = max(self.known_latest_seq, int(latest_seq))
+
+    def _check_staleness(self) -> None:
+        stale = self.staleness
+        self.slo.record(stale <= self.staleness_slo_events)
+        firing = self.slo.evaluate()
+        keys = {(a.slo, a.long_window_s) for a in firing}
+        for alert in firing:   # edge-triggered, like obs.slo.SloSet
+            if (alert.slo, alert.long_window_s) in self._active_alerts:
+                continue
+            self._incident(
+                "slo_burn", alert.burn_long, alert.threshold,
+                f"replica {self.name} staleness SLO burning at "
+                f"{alert.burn_long:.1f}x over {alert.long_window_s:g}s")
+        self._active_alerts = keys
+        if stale > self.staleness_slo_events and not self.degraded:
+            self.degraded = True
+            self._incident(
+                "replica_degraded", stale, self.staleness_slo_events,
+                f"replica {self.name} is {stale} events stale "
+                f"(SLO {self.staleness_slo_events}); "
+                + ("shedding top-k/PPR, " if self.shed_on_degrade else "")
+                + "point queries keep serving with staleness metadata")
+        elif stale <= self.staleness_slo_events and self.degraded:
+            self.degraded = False
+            self._incident(
+                "replica_recovered", stale, self.staleness_slo_events,
+                f"replica {self.name} back inside its staleness SLO")
+
+    # -- the pump: one call drains the inbox and advances retries --
+    def pump(self) -> int:
+        """Apply every due message; returns deltas applied this call."""
+        now = self._clock()
+        if self.roster is not None:
+            self.roster.beat(self.name, now)
+        applied = 0
+        for msg in self.transport.deliver(self.name, now):
+            if isinstance(msg, Heartbeat):
+                self._on_heartbeat(msg)
+            elif isinstance(msg, DeltaMsg):
+                applied += self._on_delta(msg)
+        applied += self._drain_buffer()
+        self._advance_gap(now)
+        self._check_staleness()
+        return applied
+
+    def _on_heartbeat(self, hb: Heartbeat) -> None:
+        if hb.epoch > self.epoch:
+            self._resync("new writer epoch")
+            return
+        if hb.epoch < self.epoch:
+            return               # stale incarnation still in the pipe
+        self._note_frontier(hb.latest_seq)
+        # tail-gap detection: the writer is ahead and nothing newer is
+        # in flight for us — the missing deltas were dropped outright
+        if hb.seq > self.applied_seq and self._gap is None \
+                and not self._buffer:
+            self._open_gap(hb.seq)
+
+    def _on_delta(self, msg: DeltaMsg) -> int:
+        if msg.epoch > self.epoch:
+            self._resync("new writer epoch")
+            return 0
+        if msg.epoch < self.epoch or msg.seq <= self.applied_seq:
+            self.duplicates += 1
+            return 0
+        if msg.seq == self.applied_seq + 1:
+            self._apply(msg)
+            return 1
+        if msg.seq in self._buffer:
+            self.duplicates += 1
+            return 0
+        self._buffer[msg.seq] = msg
+        if self._gap is None:
+            self._open_gap(msg.seq - 1)
+        return 0
+
+    def _drain_buffer(self) -> int:
+        n = 0
+        while (self.applied_seq + 1) in self._buffer:
+            self._apply(self._buffer.pop(self.applied_seq + 1))
+            n += 1
+        if not self._buffer and self._gap is not None \
+                and self.applied_seq >= self._gap["through"]:
+            self._gap = None     # retransmits landed; gap closed
+        return n
+
+    def _apply(self, msg: DeltaMsg) -> None:
+        upd = BatchUpdate(**{f: jnp.asarray(msg.update[f])
+                             for f in BatchUpdate._fields})
+        self.graph = apply_batch(self.graph, upd)
+        self.ranks[msg.rank_idx] = msg.rank_val
+        if self.ppr is not None:
+            touched = touched_vertices_mask(upd, self.num_vertices)
+            self.ppr, _ = repair_walk_index(self.ppr, self.graph, touched)
+        self.applied_seq = msg.seq
+        self.generation = msg.generation
+        self.last_seq = msg.last_seq
+        self._note_frontier(msg.last_seq)
+        self.deltas_applied += 1
+        self._publish()
+
+    def _publish(self) -> None:
+        self.store.seed_generation(self.generation)
+        self.store.publish(self.graph, jnp.asarray(self.ranks),
+                           self.last_seq, ppr_index=self.ppr)
+
+    # -- gap retry state machine --
+    def _open_gap(self, through_seq: int) -> None:
+        self.gaps_detected += 1
+        self._gap = dict(through=int(through_seq), attempt=0,
+                         next_t=self._clock())   # first retry immediate
+
+    def _advance_gap(self, now: float) -> None:
+        gap = self._gap
+        if gap is None or now < gap["next_t"]:
+            return
+        if gap["attempt"] >= self.max_retries:
+            self._resync(
+                f"gap at seq {self.applied_seq + 1} survived "
+                f"{self.max_retries} retransmit attempts")
+            return
+        missing = [s for s in range(self.applied_seq + 1,
+                                    gap["through"] + 1)
+                   if s not in self._buffer]
+        if not missing:
+            self._gap = None
+            return
+        gap["attempt"] += 1
+        backoff = (self.backoff_base * (2.0 ** gap["attempt"])
+                   + float(self._rng.uniform(0.0, self.backoff_base)))
+        gap["next_t"] = now + backoff
+        try:
+            writer = self.transport.writer_for(self.name)
+            self.retries_sent += 1
+            if not writer.retransmit(self.name, missing):
+                # fell off the writer's delta log — anchors only now
+                self._resync("retransmit window expired on the writer")
+        except Exception:
+            # partitioned or dead writer: the attempt is spent, the
+            # backoff stands; failover/heal will unblock us
+            pass
+
+    # -- anchor resync + late join --
+    def _resync(self, reason: str) -> bool:
+        try:
+            writer = self.transport.writer_for(self.name)
+            anchor = writer.newest_anchor()
+            tail = writer.delta_tail(anchor.seq)
+        except Exception:
+            return False         # unreachable; stay on backoff/heartbeat
+        self.resyncs += 1
+        self._load_anchor(anchor)
+        for msg in tail:
+            if msg.seq == self.applied_seq + 1:
+                self._apply(msg)
+        self._gap = None
+        self._incident(
+            "replica_resync", self.applied_seq, 0,
+            f"replica {self.name} resynced from anchor "
+            f"gen={anchor.generation} (epoch {anchor.epoch}): {reason}")
+        return True
+
+    def _load_anchor(self, anchor: AnchorMsg) -> None:
+        self.graph = _graph_from_anchor(anchor.state, self.num_vertices)
+        self.ranks = np.asarray(anchor.state["ranks"],
+                                np.float64).copy()
+        self.epoch = anchor.epoch
+        self.applied_seq = anchor.seq
+        self.generation = anchor.generation
+        self.last_seq = anchor.last_seq
+        self._note_frontier(anchor.last_seq)
+        self._buffer = {s: m for s, m in self._buffer.items()
+                        if m.epoch == self.epoch and s > anchor.seq}
+        if self.ppr_cfg is not None:
+            # pure function of (graph, seed): bit-identical to a writer
+            # index without shipping any walk data (DESIGN.md §6)
+            self.ppr = build_walk_index(self.graph, self.ppr_cfg)
+        self._publish()
+
+    def bootstrap(self) -> bool:
+        """Late join: newest anchor + replayed delta tail.  False when
+        the writer is unreachable (caller retries on its own cadence)."""
+        return self._resync("late joiner bootstrap")
+
+    def leave(self) -> None:
+        if self.roster is not None:
+            self.roster.leave(self.name)
+
+
+class ReplicaQueryClient(QueryClient):
+    """serve/query.py surface over a replica's local snapshot store.
+
+    Staleness comes from the replication stream (writer frontier minus
+    applied frontier) instead of a local ingest queue.  On a degraded
+    replica with ``shed_on_degrade``, top-k and PPR raise
+    ``ReplicaDegradedError`` while point lookups keep answering — the
+    degradation ladder's floor.
+    """
+
+    def __init__(self, replica: ReadReplica, metrics=None, **kw):
+        super().__init__(replica.store, ingest=None, metrics=metrics, **kw)
+        self.replica = replica
+
+    def _staleness(self, snap) -> int:
+        return self.replica.staleness
+
+    def _shed_check(self, what: str) -> None:
+        r = self.replica
+        if r.degraded and r.shed_on_degrade:
+            raise ReplicaDegradedError(
+                f"replica {r.name} is degraded ({r.staleness} events "
+                f"stale, SLO {r.staleness_slo_events}); {what} is shed — "
+                f"point queries (get_ranks) remain available",
+                staleness_events=r.staleness)
+
+    def top_k(self, k: int) -> QueryResult:
+        self._shed_check("top_k")
+        return super().top_k(k)
+
+    def personalized_top_k(self, seeds, k: int, mode: str = "auto",
+                           **ppr_kw) -> QueryResult:
+        self._shed_check("personalized_top_k")
+        return super().personalized_top_k(seeds, k, mode=mode, **ppr_kw)
+
+
+# ---- failover ------------------------------------------------------------
+
+class FailoverController:
+    """Promotes the freshest replica when the writer's heartbeat lapses.
+
+    Candidate freshness is ordered by (generation, last_seq).  The last
+    committed RankStore checkpoint competes as a candidate too: if every
+    surviving replica is behind it, promotion restores the checkpoint
+    ranks and rebuilds the graph at that frontier via the injected
+    ``rebuild_graph(last_seq)`` (the event feed is the graph's log, the
+    same replay contract launch/serve.py uses on restart) — so a
+    committed generation can never be lost to a lagging replica pool.
+    """
+
+    def __init__(self, transport, roster: ReplicaRoster,
+                 engine_factory, writer_name: str = "writer",
+                 ckpt_dir: Optional[str] = None,
+                 num_vertices: Optional[int] = None,
+                 rebuild_graph=None, clock=time.monotonic):
+        self.transport = transport
+        self.roster = roster
+        self.engine_factory = engine_factory
+        self.writer_name = writer_name
+        self.ckpt_dir = ckpt_dir
+        self.num_vertices = num_vertices
+        self.rebuild_graph = rebuild_graph
+        self._clock = clock
+        self.failovers = 0
+        self.incidents: List[Incident] = []
+
+    def writer_expired(self) -> bool:
+        return not self.roster.is_alive(self.writer_name, self._clock())
+
+    def check(self, writer: ReplicationWriter,
+              replicas: List[ReadReplica]):
+        """(new_writer, promoted_replica_or_None) on failover, else None."""
+        if writer.alive and not self.writer_expired():
+            return None
+        return self.promote(writer, replicas)
+
+    def promote(self, old_writer: ReplicationWriter,
+                replicas: List[ReadReplica]):
+        now = self._clock()
+        link_up = getattr(self.transport, "link_up", None)
+        alive = [r for r in replicas
+                 if self.roster.is_alive(r.name, now)
+                 and r.ranks is not None
+                 and (link_up is None
+                      or link_up(r.name, self.writer_name))]
+        best = max(alive, key=lambda r: (r.generation, r.last_seq),
+                   default=None)
+        ckpt = (rescale_serving_state(self.ckpt_dir, self.num_vertices)
+                if self.ckpt_dir and self.num_vertices else
+                (None, None, None))
+        use_ckpt = ckpt[0] is not None and (
+            best is None or (ckpt[0], ckpt[1]) > (best.generation,
+                                                  best.last_seq))
+        if use_ckpt:
+            if self.rebuild_graph is None:
+                raise RuntimeError(
+                    "checkpoint is ahead of every surviving replica and "
+                    "no rebuild_graph callback was provided — refusing "
+                    "to lose committed generation "
+                    f"{ckpt[0]} (replicas at "
+                    f"{best.generation if best else None})")
+            gen, last_seq, ranks = ckpt
+            graph = self.rebuild_graph(last_seq)
+            promoted = None
+            source = f"checkpoint gen={gen}"
+        elif best is not None:
+            gen, last_seq = best.generation, best.last_seq
+            ranks, graph = best.ranks, best.graph
+            promoted = best
+            source = f"replica {best.name} gen={gen}"
+        else:
+            raise RuntimeError("no promotion candidate: no checkpoint and "
+                               "no alive replica with state")
+        engine = self.engine_factory(graph, last_seq=last_seq,
+                                     generation=gen)
+        engine.store.seed_generation(gen)
+        engine.bootstrap(ranks=jnp.asarray(np.asarray(ranks, np.float64)),
+                         last_seq=last_seq)
+        writer = ReplicationWriter(
+            engine, self.transport, name=self.writer_name,
+            epoch=old_writer.epoch + 1,
+            anchor_every=old_writer.anchor_every,
+            log_capacity=old_writer.log_capacity, clock=self._clock)
+        writer.attach()
+        writer.heartbeat(self.roster)
+        if promoted is not None:
+            promoted.leave()
+        self.failovers += 1
+        self.incidents.append(Incident(
+            "writer_failover", WARN, gen, last_seq, old_writer.epoch + 1,
+            old_writer.epoch,
+            f"writer epoch {old_writer.epoch} expired; promoted {source} "
+            f"as epoch {old_writer.epoch + 1} (last_seq={last_seq})", now))
+        return writer, promoted

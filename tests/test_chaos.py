@@ -1,0 +1,159 @@
+"""Chaos harness: schedule grammar, fault-injectable transport semantics,
+and the seeded end-to-end run (serve/chaos.py).
+
+The end-to-end tests are the PR's acceptance check in miniature: under a
+seeded schedule of replica kill, partition, delta drop and writer kill,
+every surviving/promoted node must reconverge to writer parity (the
+harness asserts L∞ ≤ 1e-6 internally — bitwise in practice) and no
+committed generation may be lost across the failover.
+"""
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro.serve import FaultyTransport, LinkDown, LogicalClock, \
+    parse_schedule
+from repro.serve.chaos import ChaosAction, ChaosHarness
+
+
+# ---------------------------------------------------------------------------
+# schedule grammar
+# ---------------------------------------------------------------------------
+
+def test_parse_schedule_grammar():
+    acts = parse_schedule(
+        "kill:r0@600+200; partition:r1@300+200;kill_writer@900;"
+        "delay:r1@50+100")
+    assert acts == sorted(acts, key=lambda a: a.at)
+    assert acts[0] == ChaosAction("delay", "r1", 50, 100)
+    assert acts[1] == ChaosAction("partition", "r1", 300, 200)
+    assert acts[2] == ChaosAction("kill", "r0", 600, 200)
+    assert acts[3] == ChaosAction("kill_writer", None, 900, None)
+    assert parse_schedule("") == []
+    assert parse_schedule("kill:r0@5") == [ChaosAction("kill", "r0", 5,
+                                                       None)]
+
+
+@pytest.mark.parametrize("bad,msg", [
+    ("kill:r0", "missing '@offset'"),
+    ("explode:r0@5", "unknown kind"),
+    ("kill_writer:r0@5", "takes no target"),
+    ("partition@5", "needs a target"),
+])
+def test_parse_schedule_rejects(bad, msg):
+    with pytest.raises(ValueError, match=msg):
+        parse_schedule(bad)
+
+
+# ---------------------------------------------------------------------------
+# transport semantics
+# ---------------------------------------------------------------------------
+
+def test_transport_delivery_order_and_delay():
+    t = FaultyTransport(seed=0, delay=0.5)
+    t.register("a")
+    t.send("w", "a", "m1", now=0.0)
+    t.send("w", "a", "m2", now=0.1)
+    assert t.deliver("a", now=0.4) == []          # nothing due yet
+    assert t.deliver("a", now=0.55) == ["m1"]
+    assert t.deliver("a", now=1.0) == ["m2"]
+    assert t.delivered == 2
+
+
+def test_transport_partition_blocks_both_planes():
+    t = FaultyTransport(seed=0)
+    t.register("w")
+    t.register("a")
+
+    class W:
+        name, alive = "w", True
+    t.set_writer(W())
+    t.partition("a")
+    t.send("w", "a", "m", now=0.0)                # data plane: dropped
+    assert t.dropped == 1
+    assert t.deliver("a", now=1.0) == []
+    with pytest.raises(LinkDown):                 # control plane: raises
+        t.writer_for("a")
+    t.heal("a")
+    assert t.writer_for("a") is not None
+    t.send("w", "a", "m2", now=0.0)
+    assert t.deliver("a", now=1.0) == ["m2"]
+
+
+def test_transport_kill_loses_inbox():
+    t = FaultyTransport(seed=0)
+    t.register("a")
+    t.send("w", "a", "m", now=0.0)
+    t.kill("a")                                   # process death
+    assert t.deliver("a", now=1.0) == []
+    t.revive("a")
+    assert t.deliver("a", now=1.0) == []          # the inbox is gone
+
+
+def test_transport_duplicate_and_drop_counters():
+    t = FaultyTransport(seed=1, dup_p=1.0)
+    t.register("a")
+    t.send("w", "a", "m", now=0.0)
+    assert t.duplicated == 1
+    assert len(t.deliver("a", now=1.0)) == 2
+    t2 = FaultyTransport(seed=1, drop_p=1.0)
+    t2.register("a")
+    t2.send("w", "a", "m", now=0.0)
+    assert t2.dropped == 1 and t2.deliver("a", now=1.0) == []
+
+
+def test_transport_seeded_faults_are_deterministic():
+    def counters(seed):
+        t = FaultyTransport(seed=seed, drop_p=0.3, dup_p=0.2,
+                            reorder_p=0.3)
+        t.register("a")
+        for i in range(200):
+            t.send("w", "a", i, now=i * 0.01)
+        got = t.deliver("a", now=100.0)
+        return (t.dropped, t.duplicated, t.reordered, tuple(got))
+    assert counters(7) == counters(7)
+    assert counters(7) != counters(8)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end chaos runs (the harness asserts parity internally)
+# ---------------------------------------------------------------------------
+
+def test_clean_run_reaches_parity():
+    h = ChaosHarness(num_replicas=2, events=160, scale=7, seed=3)
+    rep = h.run()
+    assert rep.parity_checks >= 1
+    assert rep.parity_max_linf <= 1e-6
+    assert rep.failovers == 0 and rep.generations > 0
+
+
+def test_chaos_run_recovers_from_kill_partition_and_failover():
+    h = ChaosHarness(
+        num_replicas=2, events=320, scale=7, seed=7, drop_p=0.05,
+        schedule="partition:r1@80+60;kill:r0@160+60;kill_writer@260",
+        staleness_slo_events=64)
+    rep = h.run()
+    assert rep.parity_checks >= 3          # heal, restart, failover, end
+    assert rep.parity_max_linf <= 1e-6
+    assert rep.failovers == 1
+    assert h.writer.epoch == 1
+    assert rep.resyncs >= 1
+    assert rep.incidents["writer_failover"] == 1
+    assert rep.incidents.get("replica_resync", 0) >= 1
+    # no committed generation lost: the promoted writer kept counting
+    assert rep.generations > 0
+    assert rep.events_fed == 320
+    assert rep.transport["dropped"] > 0
+
+
+def test_chaos_run_is_seed_deterministic():
+    def run(seed):
+        h = ChaosHarness(num_replicas=1, events=160, scale=7, seed=seed,
+                         drop_p=0.1, schedule="partition:r0@40+40")
+        rep = h.run()
+        ranks = np.asarray(h.writer.engine.store.snapshot().ranks)
+        return rep.generations, rep.resyncs, rep.parity_checks, ranks
+    g1, r1, p1, ranks1 = run(11)
+    g2, r2, p2, ranks2 = run(11)
+    assert (g1, r1, p1) == (g2, r2, p2)
+    np.testing.assert_array_equal(ranks1, ranks2)

@@ -1,6 +1,10 @@
-"""Fault-tolerance tests: checkpoint atomicity, restore, restart-replay,
-straggler rebalancing."""
+"""Fault-tolerance tests: checkpoint atomicity + integrity digests,
+restore, restart-replay, straggler rebalancing, replica membership,
+elastic rescale of the kernel serving path."""
 import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +52,80 @@ def test_torn_write_is_not_a_checkpoint(tmp_path):
     ck.save(str(tmp_path), 3, dict(x=jnp.zeros((2,))))
     os.makedirs(tmp_path / "step_0000000009.tmp")   # simulated crash
     assert ck.latest_step(str(tmp_path)) == 3
+
+
+def _corrupt_leaf(tmp_path, step, leaf=0):
+    """Bit-flip one element in place: shape/dtype stay valid, crc32
+    doesn't — the silent-corruption case digests exist to catch."""
+    path = os.path.join(str(tmp_path), f"step_{step:010d}",
+                        f"leaf_{leaf:05d}.npy")
+    arr = np.load(path)
+    arr.reshape(-1)[0] += 1
+    np.save(path, arr)
+    return path
+
+
+def test_corrupt_leaf_raises_structured_error(tmp_path):
+    ck.save(str(tmp_path), 4, dict(x=jnp.arange(8, dtype=jnp.float64)))
+    _corrupt_leaf(tmp_path, 4)
+    with pytest.raises(ck.CheckpointCorruptError) as e:
+        ck.restore(str(tmp_path), 4, dict(x=jnp.zeros(8, jnp.float64)))
+    assert e.value.step == 4
+    assert "x" in e.value.leaf
+
+
+def test_unreadable_manifest_is_corrupt_not_crash(tmp_path):
+    ck.save(str(tmp_path), 1, dict(x=jnp.zeros(4)))
+    with open(tmp_path / "step_0000000001" / "manifest.json", "w") as f:
+        f.write("{not json")
+    with pytest.raises(ck.CheckpointCorruptError):
+        ck.restore(str(tmp_path), 1, dict(x=jnp.zeros(4)))
+
+
+def test_restore_latest_valid_falls_back_past_corrupt_step(tmp_path):
+    target = dict(x=jnp.zeros(8, jnp.float64))
+    ck.save(str(tmp_path), 1, dict(x=jnp.full(8, 1.0)))
+    ck.save(str(tmp_path), 2, dict(x=jnp.full(8, 2.0)))
+    _corrupt_leaf(tmp_path, 2)                # newest step is torn
+    step, state = ck.restore_latest_valid(str(tmp_path), target)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(state["x"]), np.full(8, 1.0))
+    # every retained step corrupt -> the error propagates (a silent cold
+    # start would hide the corruption)
+    _corrupt_leaf(tmp_path, 1)
+    with pytest.raises(ck.CheckpointCorruptError):
+        ck.restore_latest_valid(str(tmp_path), target)
+
+
+def test_restore_latest_valid_empty_dir(tmp_path):
+    assert ck.restore_latest_valid(str(tmp_path / "nope"),
+                                   dict(x=jnp.zeros(2))) == (None, None)
+
+
+def test_manager_restore_latest_skips_corrupt(tmp_path):
+    mgr = ck.CheckpointManager(str(tmp_path), every=1, keep_last=3)
+    for step in (1, 2, 3):
+        mgr.maybe_save(step, dict(i=jnp.asarray(float(step))))
+    _corrupt_leaf(tmp_path, 3)
+    step, state = mgr.restore_latest(dict(i=jnp.zeros(())))
+    assert step == 2 and float(state["i"]) == 2.0
+
+
+def test_replica_roster_membership_and_liveness():
+    from repro.ft.elastic import ReplicaRoster
+    r = ReplicaRoster(heartbeat_timeout=1.0)
+    r.join("a", now=0.0)
+    r.beat("b", now=0.5)                      # implicit join via beat
+    assert r.members() == ["a", "b"] and r.joins == 2
+    assert r.alive(now=1.0) == ["a", "b"]
+    assert r.alive(now=1.2) == ["b"]          # a's beat expired
+    assert not r.is_alive("a", now=1.2)
+    r.beat("a", now=1.3)
+    assert r.is_alive("a", now=1.5)
+    r.leave("a")
+    assert r.members() == ["b"] and r.leaves == 1
+    r.leave("ghost")                          # unknown leave is a no-op
+    assert r.leaves == 1
 
 
 def test_manager_restart(tmp_path):
@@ -120,3 +198,121 @@ def test_stream_restart_equivalence(tmp_path):
                            stream.num_batches)
     np.testing.assert_allclose(np.asarray(ranks_full),
                                np.asarray(ranks_resumed), atol=1e-12)
+
+
+@pytest.mark.slow
+def test_elastic_rescale_kernel_serving_path(tmp_path):
+    """Checkpoint the kernel serving path on a 4-way mesh, restore onto
+    1-way and 2-way via ``rescale_pagerank_state``: the resumed stream
+    must land within L1 <= 1e-6 of the uninterrupted run, with zero
+    extra retraces after the resumed engine's first batch.
+
+    Subprocess: the device count must be forced before jax initialises
+    (conftest keeps the main process at one device)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    code = f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        import repro
+        from jax.sharding import Mesh
+        from repro.ft import checkpoint as ck
+        from repro.ft.elastic import rescale_pagerank_state
+        from repro.graph.generators import rmat_edges
+        from repro.graph.structure import from_coo
+        from repro.kernels.pagerank_spmv.shard import TRACE_COUNTS
+        from repro.serve import IngestQueue, RankStore, ServeEngine, \\
+            ServeMetrics
+
+        DIR = {str(tmp_path)!r}
+        edges, n = rmat_edges(7, 8, seed=2)
+        rng = np.random.default_rng(0)
+        feed = [(int(u), int(v)) for u, v in rng.integers(0, n, (160, 2))
+                if u != v]
+        SPLIT = 80
+
+        def fresh_graph():
+            return from_coo(edges[:, 0], edges[:, 1], n,
+                            edge_capacity=len(edges) + len(feed) + 64)
+
+        def serve(mesh_devs, upto):
+            mesh = Mesh(np.asarray(jax.devices()[:mesh_devs]), ("model",))
+            ingest = IngestQueue(flush_size=16, flush_interval=0.0)
+            eng = ServeEngine(fresh_graph(), ingest, RankStore(),
+                              metrics=ServeMetrics(),
+                              method="frontier_prune", engine="kernel",
+                              mesh=mesh,
+                              kernel_opts=dict(use_kernel=False, be=32,
+                                               vb=16))
+            eng.bootstrap()
+            for u, v in feed[:upto]:
+                ingest.submit_insert(u, v)
+                eng.step()
+            eng.drain()
+            return eng
+
+        # ---- uninterrupted 4-way reference over the whole feed --------
+        ref = serve(4, len(feed))
+        ranks_ref = np.asarray(ref.store.snapshot().ranks)
+
+        # ---- 4-way run to SPLIT, checkpoint (ranks, batch_idx) --------
+        half = serve(4, SPLIT)
+        snap = half.store.snapshot()
+        ck.save(DIR, SPLIT, dict(ranks=jnp.asarray(snap.ranks),
+                                 batch_idx=jnp.asarray(np.int64(SPLIT))))
+
+        # ---- restore onto 1-way and 2-way, resume the tail ------------
+        for devs in (1, 2):
+            mesh = Mesh(np.asarray(jax.devices()[:devs]), ("model",))
+            idx, ranks_host, part = rescale_pagerank_state(
+                DIR, fresh_graph(), mesh, dtype=np.float64)
+            assert idx == SPLIT
+            assert part is not None
+            # rebuild the graph at the checkpoint frontier (the feed is
+            # the log), then resume serving on the new mesh from the
+            # restored ranks
+            g = fresh_graph()
+            ingest = IngestQueue(flush_size=16, flush_interval=0.0,
+                                 start_seq=0)
+            eng = ServeEngine(g, ingest, RankStore(),
+                              metrics=ServeMetrics(),
+                              method="frontier_prune", engine="kernel",
+                              mesh=mesh,
+                              kernel_opts=dict(use_kernel=False, be=32,
+                                               vb=16))
+            eng.bootstrap()
+            for u, v in feed[:idx]:       # replay to the frontier
+                ingest.submit_insert(u, v)
+                eng.step()
+            eng.drain()
+            eng.bootstrap(ranks=jnp.asarray(ranks_host), last_seq=idx - 1)
+            # first resumed batch may compile for the new mesh shape;
+            # after it, the stream must add zero traces
+            tail = feed[idx:]
+            ingest2 = eng.ingest
+            for u, v in tail[:16]:
+                ingest2.submit_insert(u, v)
+            eng.drain()
+            before = dict(TRACE_COUNTS)
+            for u, v in tail[16:]:
+                ingest2.submit_insert(u, v)
+                eng.step()
+            eng.drain()
+            after = dict(TRACE_COUNTS)
+            retraces = {{k: after[k] - before.get(k, 0) for k in after
+                         if after[k] != before.get(k, 0)}}
+            assert not retraces, f"retraced after resume: {{retraces}}"
+            ranks_out = np.asarray(eng.store.snapshot().ranks)
+            l1 = float(np.abs(ranks_out - ranks_ref).sum())
+            assert l1 <= 1e-6, (devs, l1)
+            print(f"mesh {{devs}}-way: L1={{l1:.2e}} OK")
+        print("RESCALE OK")
+    """
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), timeout=540)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "RESCALE OK" in r.stdout

@@ -1,0 +1,372 @@
+"""Replication tier: delta streams, gap retry/backoff, anchor resync,
+late join, graceful degradation, writer failover (serve/replicate.py).
+
+Everything runs on the injected ``LogicalClock`` + ``FaultyTransport``,
+so every retry, backoff expiry and failover decision is deterministic.
+Parity assertions are *bitwise* (L∞ == 0): deltas carry the exact f64
+values the writer published, so a correct replica is not merely close —
+it is identical.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.ft.elastic import ReplicaRoster
+from repro.graph.generators import erdos_renyi_edges
+from repro.graph.structure import from_coo
+from repro.serve import (FailoverController, FaultyTransport, IngestQueue,
+                         LinkDown, LogicalClock, RankStore, ReadReplica,
+                         ReplicaDegradedError, ReplicaQueryClient,
+                         ReplicationWriter, ServeEngine, ServeMetrics)
+
+N = 64
+DT = 0.01
+
+
+def _graph(seed=0, m=300):
+    edges, n = erdos_renyi_edges(N, m, seed=seed)
+    return from_coo(edges[:, 0], edges[:, 1], n,
+                    edge_capacity=len(edges) + 1024)
+
+
+def _engine_factory(clock, base_graph, ckpt_dir=None, ckpt_every=1):
+    def make(graph, last_seq, generation):
+        ingest = IngestQueue(flush_size=8, flush_interval=0.0,
+                             max_pending=1 << 16,
+                             start_seq=last_seq + 1, clock=clock)
+        store = (RankStore(ckpt_dir=ckpt_dir, ckpt_every=ckpt_every)
+                 if ckpt_dir else RankStore())
+        return ServeEngine(graph, ingest, store, metrics=ServeMetrics(),
+                           method="frontier_prune", clock=clock)
+    return make
+
+
+def _writer(clock, transport, roster, anchor_every=4, ckpt_dir=None,
+            **writer_kw):
+    factory = _engine_factory(clock, None, ckpt_dir=ckpt_dir)
+    engine = factory(_graph(), last_seq=-1, generation=0)
+    engine.bootstrap()
+    w = ReplicationWriter(engine, transport, anchor_every=anchor_every,
+                          clock=clock, **writer_kw)
+    w.attach()
+    transport.set_writer(w)
+    w.heartbeat(roster)
+    return w, factory
+
+
+def _replica(name, clock, transport, roster, **kw):
+    kw.setdefault("max_retries", 3)
+    kw.setdefault("backoff_base", 2 * DT)
+    kw.setdefault("slo_windows", ((1.0, 1.0),))
+    kw.setdefault("slo_min_events", 4)
+    return ReadReplica(name, transport, N, roster=roster, seed=0,
+                       clock=clock, **kw)
+
+
+def _feed(writer, events, clock, roster, replicas=(), seed=1,
+          step_every=8, hb_every=4, record=None):
+    rng = np.random.default_rng(seed)
+    for i in range(events):
+        clock.advance(DT)
+        u, v = (int(x) for x in rng.integers(0, N, size=2))
+        if u != v:
+            writer.engine.ingest.submit_insert(u, v)
+            if record is not None:
+                record.append((u, v))
+        if (i + 1) % step_every == 0:
+            writer.engine.step(force=True)
+        if (i + 1) % hb_every == 0:
+            writer.heartbeat(roster)
+        for r in replicas:
+            r.pump()
+    writer.engine.drain()
+
+
+def _settle(writer, replicas, clock, roster, rounds=60):
+    """Advance past every backoff and pump until nothing is in flight."""
+    for _ in range(rounds):
+        clock.advance(0.1)
+        writer.heartbeat(roster)
+        for r in replicas:
+            r.pump()
+
+
+def _assert_parity(writer, replica):
+    wgen = writer.engine.store.generation
+    assert replica.epoch == writer.epoch
+    assert replica.generation == wgen, (replica.generation, wgen)
+    wr = np.asarray(writer.engine.store.snapshot().ranks)
+    linf = float(np.max(np.abs(replica.ranks - wr)))
+    assert linf == 0.0, f"replica diverged: L∞={linf:.3e} at gen {wgen}"
+
+
+# ---------------------------------------------------------------------------
+# clean stream: exact replication + query surface
+# ---------------------------------------------------------------------------
+
+def test_delta_stream_reaches_bitwise_parity():
+    clock = LogicalClock()
+    transport = FaultyTransport(seed=0)
+    roster = ReplicaRoster(heartbeat_timeout=1e9)
+    w, _ = _writer(clock, transport, roster)
+    r = _replica("r0", clock, transport, roster)
+    assert r.bootstrap()
+    _feed(w, 80, clock, roster, replicas=[r])
+    _settle(w, [r], clock, roster)
+    _assert_parity(w, r)
+    assert r.deltas_applied > 0
+    assert r.gaps_detected == 0 and r.resyncs == 1   # bootstrap only
+    # the replica's query surface answers from its own snapshot store
+    client = ReplicaQueryClient(r)
+    wr = np.asarray(w.engine.store.snapshot().ranks)
+    res = client.get_ranks([3, 1, 4])
+    np.testing.assert_array_equal(res.ranks, wr[[3, 1, 4]])
+    assert res.staleness_events == 0
+    top = client.top_k(5)
+    np.testing.assert_array_equal(np.asarray(top.ranks),
+                                  np.sort(wr)[::-1][:5])
+
+
+def test_duplicates_and_reorder_are_idempotent():
+    clock = LogicalClock()
+    transport = FaultyTransport(seed=3, dup_p=0.4, reorder_p=0.5,
+                               reorder_window=4 * DT)
+    roster = ReplicaRoster(heartbeat_timeout=1e9)
+    w, _ = _writer(clock, transport, roster)
+    r = _replica("r0", clock, transport, roster)
+    assert r.bootstrap()
+    _feed(w, 120, clock, roster, replicas=[r])
+    _settle(w, [r], clock, roster)
+    _assert_parity(w, r)
+    assert transport.duplicated > 0 and transport.reordered > 0
+    assert r.duplicates > 0                # dups detected, applied once
+
+
+# ---------------------------------------------------------------------------
+# gap retry state machine
+# ---------------------------------------------------------------------------
+
+def test_dropped_deltas_recovered_by_retransmit():
+    clock = LogicalClock()
+    transport = FaultyTransport(seed=5, drop_p=0.3)
+    roster = ReplicaRoster(heartbeat_timeout=1e9)
+    w, _ = _writer(clock, transport, roster)
+    r = _replica("r0", clock, transport, roster)
+    assert r.bootstrap()
+    _feed(w, 120, clock, roster, replicas=[r])
+    _settle(w, [r], clock, roster)
+    _assert_parity(w, r)
+    assert r.gaps_detected >= 1
+    assert r.retries_sent >= 1
+    assert w.retransmits >= 1
+
+
+def test_gap_beyond_log_forces_anchor_resync():
+    clock = LogicalClock()
+    transport = FaultyTransport(seed=0)
+    roster = ReplicaRoster(heartbeat_timeout=1e9)
+    # tiny retransmit log: a long partition spill is only anchor-servable
+    w, _ = _writer(clock, transport, roster, anchor_every=2,
+                   log_capacity=2)
+    r = _replica("r0", clock, transport, roster)
+    assert r.bootstrap()
+    _feed(w, 40, clock, roster, replicas=[r])
+    transport.partition("r0")
+    _feed(w, 80, clock, roster, replicas=[r])
+    transport.heal("r0")
+    _settle(w, [r], clock, roster)
+    _assert_parity(w, r)
+    assert r.resyncs >= 2                  # bootstrap + post-partition
+    kinds = [i.kind for i in r.incidents]
+    assert "replica_resync" in kinds
+
+
+def test_late_joiner_bootstraps_from_anchor_and_tail():
+    clock = LogicalClock()
+    transport = FaultyTransport(seed=0)
+    roster = ReplicaRoster(heartbeat_timeout=1e9)
+    w, _ = _writer(clock, transport, roster, anchor_every=8)
+    _feed(w, 60, clock, roster)
+    late = _replica("late", clock, transport, roster)
+    assert late.bootstrap()                # anchor + replayed delta tail
+    _assert_parity(w, late)
+
+
+def test_unreachable_writer_fails_bootstrap_gracefully():
+    clock = LogicalClock()
+    transport = FaultyTransport(seed=0)
+    roster = ReplicaRoster(heartbeat_timeout=1e9)
+    w, _ = _writer(clock, transport, roster)
+    w.kill()
+    r = _replica("r0", clock, transport, roster)
+    assert not r.bootstrap()               # False, not an exception
+    with pytest.raises(LinkDown):
+        transport.writer_for("r0")
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation ladder
+# ---------------------------------------------------------------------------
+
+def test_degraded_replica_sheds_topk_but_serves_points():
+    clock = LogicalClock()
+    transport = FaultyTransport(seed=0)
+    roster = ReplicaRoster(heartbeat_timeout=1e9)
+    w, _ = _writer(clock, transport, roster)
+    r = _replica("r0", clock, transport, roster, staleness_slo_events=4)
+    assert r.bootstrap()
+    _feed(w, 40, clock, roster, replicas=[r])
+    _settle(w, [r], clock, roster)
+    assert not r.degraded
+    # blackhole the stream, then let one heartbeat reveal the lag
+    transport.drop_p = 1.0
+    _feed(w, 40, clock, roster, replicas=[r])
+    transport.drop_p = 0.0
+    clock.advance(DT)
+    w.heartbeat(roster)
+    r.pump()
+    assert r.degraded and r.staleness > 4
+    client = ReplicaQueryClient(r)
+    res = client.get_ranks([0, 1])         # the ladder's floor holds
+    assert res.staleness_events == r.staleness
+    with pytest.raises(ReplicaDegradedError) as e:
+        client.top_k(3)
+    assert e.value.staleness_events == r.staleness
+    with pytest.raises(ReplicaDegradedError):
+        client.personalized_top_k([1], 3)
+    kinds = [i.kind for i in r.incidents]
+    assert "replica_degraded" in kinds
+    # recovery: retransmit/resync catches up, shedding lifts
+    _settle(w, [r], clock, roster)
+    assert not r.degraded
+    _assert_parity(w, r)
+    assert "replica_recovered" in [i.kind for i in r.incidents]
+    client.top_k(3)                        # shedding is over
+
+
+def test_shed_disabled_keeps_answering_stale_topk():
+    clock = LogicalClock()
+    transport = FaultyTransport(seed=0)
+    roster = ReplicaRoster(heartbeat_timeout=1e9)
+    w, _ = _writer(clock, transport, roster)
+    r = _replica("r0", clock, transport, roster, staleness_slo_events=4,
+                 shed_on_degrade=False)
+    assert r.bootstrap()
+    transport.drop_p = 1.0
+    _feed(w, 40, clock, roster, replicas=[r])
+    transport.drop_p = 0.0
+    clock.advance(DT)
+    w.heartbeat(roster)
+    r.pump()
+    assert r.degraded
+    res = ReplicaQueryClient(r).top_k(3)   # stale but answered
+    assert res.staleness_events == r.staleness > 4
+
+
+# ---------------------------------------------------------------------------
+# heartbeat failover
+# ---------------------------------------------------------------------------
+
+def test_failover_promotes_freshest_replica_without_losing_generation():
+    clock = LogicalClock()
+    transport = FaultyTransport(seed=0)
+    roster = ReplicaRoster(heartbeat_timeout=0.5)
+    w, factory = _writer(clock, transport, roster)
+    r0 = _replica("r0", clock, transport, roster)
+    r1 = _replica("r1", clock, transport, roster)
+    assert r0.bootstrap() and r1.bootstrap()
+    # r0 misses the second half of the stream: r1 is strictly fresher
+    _feed(w, 40, clock, roster, replicas=[r0, r1])
+    transport.partition("r0")
+    _feed(w, 40, clock, roster, replicas=[r0, r1])
+    transport.heal("r0")
+    r1.pump()
+    committed_gen = w.engine.store.generation
+    committed_seq = w.engine.ingest.latest_seq
+    w.kill()
+    clock.advance(1.0)                     # writer heartbeat lapses...
+    r0.pump()
+    r1.pump()                              # ...but the replicas keep beating
+    ctl = FailoverController(transport, roster, factory,
+                             num_vertices=N, clock=clock)
+    promoted = ctl.check(w, [r0, r1])
+    assert promoted is not None
+    new_w, promoted_replica = promoted
+    assert promoted_replica is r1          # freshest by (gen, last_seq)
+    assert new_w.epoch == w.epoch + 1
+    assert new_w.engine.store.generation >= committed_gen
+    assert new_w.engine.ingest.start_seq > \
+        new_w.engine.store.snapshot().last_seq
+    transport.unregister(r1.name)
+    transport.set_writer(new_w)
+    assert ctl.failovers == 1
+    assert "writer_failover" in [i.kind for i in ctl.incidents]
+    # the survivor converges on the new epoch and keeps replicating
+    _feed(new_w, 40, clock, roster, replicas=[r0],
+          seed=9)
+    _settle(new_w, [r0], clock, roster)
+    assert r0.epoch == new_w.epoch
+    _assert_parity(new_w, r0)
+    assert new_w.engine.ingest.latest_seq >= committed_seq
+
+
+def test_failover_restores_checkpoint_when_replicas_lag(tmp_path):
+    clock = LogicalClock()
+    transport = FaultyTransport(seed=0)
+    roster = ReplicaRoster(heartbeat_timeout=0.5)
+    feed_log: list = []
+    w, factory = _writer(clock, transport, roster,
+                         ckpt_dir=str(tmp_path))
+    base_graph = w.engine.store.snapshot().graph
+
+    def rebuild_graph(last_seq):
+        """The recorded feed is the graph's log (insert-only here)."""
+        src = np.asarray(base_graph.src).copy()
+        dst = np.asarray(base_graph.dst).copy()
+        valid = np.asarray(base_graph.valid).copy()
+        ne = int(np.asarray(base_graph.num_edges))
+        live = set(zip(src[:ne][valid[:ne]].tolist(),
+                       dst[:ne][valid[:ne]].tolist()))
+        for u, v in feed_log[: last_seq + 1]:
+            if (u, v) not in live:
+                src[ne], dst[ne], valid[ne] = u, v, True
+                live.add((u, v))
+                ne += 1
+        import dataclasses
+        return dataclasses.replace(
+            base_graph, src=jnp.asarray(src), dst=jnp.asarray(dst),
+            valid=jnp.asarray(valid),
+            num_edges=jnp.asarray(np.int32(ne)))
+
+    r0 = _replica("r0", clock, transport, roster)
+    assert r0.bootstrap()
+    # the replica is partitioned for the WHOLE stream: every surviving
+    # candidate is behind the last committed checkpoint
+    transport.partition("r0")
+    _feed(w, 40, clock, roster, replicas=[r0], record=feed_log)
+    committed_gen = w.engine.store.generation
+    committed_seq = int(w.engine.store.snapshot().last_seq)
+    assert committed_gen > 0
+    w.kill()
+    clock.advance(1.0)
+    # without the replay callback, promotion must refuse to lose the
+    # committed generation rather than silently promote a stale replica
+    bare = FailoverController(transport, roster, factory,
+                              ckpt_dir=str(tmp_path), num_vertices=N,
+                              rebuild_graph=None, clock=clock)
+    with pytest.raises(RuntimeError, match="refusing"):
+        bare.promote(w, [r0])
+    ctl = FailoverController(transport, roster, factory,
+                             ckpt_dir=str(tmp_path), num_vertices=N,
+                             rebuild_graph=rebuild_graph, clock=clock)
+    new_w, promoted_replica = ctl.promote(w, [r0])
+    assert promoted_replica is None        # came from the checkpoint
+    assert new_w.engine.store.generation == committed_gen
+    assert int(new_w.engine.store.snapshot().last_seq) == committed_seq
+    transport.set_writer(new_w)
+    transport.heal("r0")
+    # healed replica resyncs onto the promoted epoch at full parity
+    _settle(new_w, [r0], clock, roster)
+    assert r0.epoch == new_w.epoch == w.epoch + 1
+    _assert_parity(new_w, r0)

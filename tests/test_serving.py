@@ -276,6 +276,88 @@ def test_background_engine_thread_drains_queue():
 
 
 # ---------------------------------------------------------------------------
+# iteration budget: capped solves, frontier carryover (ft/straggler.py)
+# ---------------------------------------------------------------------------
+
+def test_iteration_budget_caps_solves_and_carries_frontier():
+    g, _ = _graph()
+    # a 2-iteration cap cannot converge a frontier batch: the engine must
+    # cap the solve, carry the unconverged frontier, and count it
+    ingest, store, engine, metrics = _service(
+        g, flush_size=16, static_fallback_frac=2.0, iteration_budget=2)
+    engine.bootstrap()
+    rng = np.random.default_rng(2)
+    for _ in range(64):
+        u, v = rng.integers(0, N, 2)
+        if u != v:
+            ingest.submit(INSERT, int(u), int(v))
+        engine.step()
+    engine.drain()
+    m = metrics.as_dict()
+    assert m["batches"] >= 2
+    assert m["iterations_mean"] <= 2.0        # the cap held
+    assert m["budget_carryover"] >= 1         # carried at least once
+    snap = store.snapshot()
+    assert abs(float(jnp.sum(snap.ranks)) - 1.0) < 1e-3   # still sane
+
+
+def test_without_budget_no_carryover_counted():
+    g, _ = _graph()
+    ingest, store, engine, metrics = _service(g, flush_size=16)
+    engine.bootstrap()
+    rng = np.random.default_rng(2)
+    for _ in range(32):
+        u, v = rng.integers(0, N, 2)
+        if u != v:
+            ingest.submit(INSERT, int(u), int(v))
+    engine.drain()
+    assert metrics.as_dict()["budget_carryover"] == 0
+
+
+# ---------------------------------------------------------------------------
+# close(): the shadow thread is joined and its mailbox flushed
+# ---------------------------------------------------------------------------
+
+def test_engine_close_flushes_pending_shadow_divergence():
+    from repro.obs import CorrectnessMonitor, MonitorConfig
+    g, _ = _graph()
+    mon = CorrectnessMonitor(MonitorConfig(
+        shadow_every=1, latency_slo_ms=1e9, staleness_slo_events=10**9))
+    ingest, store, engine, _ = _service(g, flush_size=8, monitor=mon)
+    engine.bootstrap()
+    # corrupt the NEXT generation's ranks: the shadow reference solve is
+    # the detector, and it may still be pending when close() is called —
+    # the flush-on-close contract says it must be reported anyway
+    engine.inject_fault(store.generation + 1, kind="rank", vertex=0,
+                        scale=4.0)
+    rng = np.random.default_rng(4)
+    for _ in range(8):
+        u, v = rng.integers(0, N, 2)
+        if u != v:
+            ingest.submit(INSERT, int(u), int(v))
+    engine.drain()
+    engine.close()                            # joins + flushes the mailbox
+    assert mon.shadow._thread is None         # actually joined
+    kinds = {i.kind for i in mon.incidents}
+    assert kinds & {"shadow_l1", "shadow_linf"}, kinds
+    engine.close()                            # idempotent
+
+
+def test_shadow_stop_verifies_pending_sample_before_join():
+    from repro.obs.shadow import ShadowVerifier
+    g, _ = _graph()
+    ref_ranks = np.full(N, 1.0 / N)
+    sv = ShadowVerifier(every=1, l1_budget=1e-6, background=True)
+    # a wildly wrong rank vector, submitted and immediately stopped: the
+    # worker must verify it (and record the incident) before the join
+    sv.maybe_submit(0, -1, g, jnp.asarray(ref_ranks * 3.0))
+    sv.stop()
+    assert sv.samples == 1
+    assert any(i.kind == "shadow_l1" for i in sv.take_incidents())
+    sv.stop()                                 # idempotent
+
+
+# ---------------------------------------------------------------------------
 # query: top-k, point ranks, personalized, staleness accounting
 # ---------------------------------------------------------------------------
 
