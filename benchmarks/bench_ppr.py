@@ -18,6 +18,19 @@ Emitted rows (µs per call + derived):
                        derived = walks resampled (== stale count —
                        the resample-count invariant is asserted),
                        full-rebuild µs and the repair speedup
+    ppr/repair_shardS  the same micro-batch repaired on an S-way
+                       range-sharded index (ppr/shard.py); the
+                       repaired shards must unshard bitwise to the
+                       single-device repair.  The companion
+                       ``_modeled`` row carries the critical-path
+                       scaling ratio total_stale / max_per_shard_stale
+                       — stale-mass balance is a pure function of the
+                       (seeded) graph and batch, so the ratio is
+                       hardware-stable and safe for the nightly
+                       regression gate (wall-clock on forced host
+                       devices is not).  S is clipped to the visible
+                       device count; on CPU set
+                       XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 from __future__ import annotations
 
@@ -36,7 +49,9 @@ from repro.graph.generators import random_batch_update
 from repro.graph.structure import from_coo
 from repro.ppr import (DEFAULT_MIN_EFFECTIVE_WALKS, IndexConfig,
                        build_walk_index, ppr_top_k, precision_at_k,
-                       repair_walk_index, stale_walks)
+                       repair_walk_index, repair_walk_index_sharded,
+                       shard_stale_counts, shard_walk_index, stale_walks,
+                       unshard_walk_index)
 
 
 def _timed(fn, repeats=3):
@@ -52,7 +67,7 @@ def _timed(fn, repeats=3):
 
 
 def run(scale=17, edge_factor=8, num_walks=64, max_len=16, num_queries=4,
-        batch_size=256, topk=10, seed=0):
+        batch_size=256, topk=10, seed=0, shard_counts=(2, 4, 8)):
     edges, n = cached_rmat(scale, edge_factor, seed=1)
     graph = from_coo(edges[:, 0], edges[:, 1], n,
                      edge_capacity=int(len(edges) * 1.2))
@@ -109,6 +124,35 @@ def run(scale=17, edge_factor=8, num_walks=64, max_len=16, num_queries=4,
          f"resampled={num_stale}/{n * num_walks};"
          f"rebuild_us={t_rebuild*1e6:.0f};"
          f"speedup={t_rebuild / t_repair:.0f}x")
+
+    # ---- sharded repair scaling ------------------------------------------
+    repaired_single, _ = repair_walk_index(index, graph2, touched)
+    for s in shard_counts:
+        if len(jax.devices()) < s:
+            print(f"# skipping ppr/repair_shard{s}: needs {s} devices, "
+                  f"{len(jax.devices())} visible")
+            continue
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:s]), ("model",))
+        sidx = shard_walk_index(index, s, mesh=mesh)
+        counts = shard_stale_counts(sidx, touched)
+        assert int(counts.sum()) == num_stale, (counts, num_stale)
+
+        def do_sharded(si=sidx):
+            out, resampled = repair_walk_index_sharded(si, graph2, touched)
+            assert resampled == num_stale, (resampled, num_stale)
+            return out.steps
+
+        t_shard, _ = _timed(do_sharded)
+        out, _ = repair_walk_index_sharded(sidx, graph2, touched)
+        assert bool(jnp.all(
+            unshard_walk_index(out).steps == repaired_single.steps)), \
+            f"sharded repair (S={s}) diverged from single-device repair"
+        peak = int(counts.max())
+        ratio = num_stale / max(peak, 1)
+        emit(f"ppr/repair_shard{s}", t_shard,
+             f"resampled={num_stale};peak_shard={peak};shards={s}")
+        emit(f"ppr/repair_shard{s}_modeled", t_shard,
+             f"events_per_s_ratio={ratio:.2f};shards={s}")
 
 
 if __name__ == "__main__":

@@ -7,7 +7,10 @@ Only the ``*_modeled`` ratio rows gate by default — they are
 roofline-normalized from the engines' work counters, so they are stable
 across host hardware (the wall-clock ratios on a shared CI runner are
 not).  ``--all-ratios`` widens the gate to every ``events_per_s_ratio``
-row for local use.
+row for local use; ``--filter SUBSTR`` restricts the gate to rows whose
+name contains SUBSTR (so e.g. the nightly serving run gates
+``serving/`` rows and a separate bench_ppr run gates ``ppr/`` rows,
+each against the same committed baseline).
 
     PYTHONPATH=src:. python benchmarks/run.py --json /tmp/bench.json
     python benchmarks/check_regression.py /tmp/bench.json
@@ -78,13 +81,18 @@ def check_monitor_floor(current_path: str, floor: float) -> int:
 
 
 def check(current_path: str, baseline_path: str, tolerance: float,
-          modeled_only: bool = True) -> int:
+          modeled_only: bool = True, name_filter: str = "") -> int:
     with open(current_path) as f:
         current = ratio_rows(json.load(f), modeled_only)
     with open(baseline_path) as f:
         baseline = ratio_rows(json.load(f), modeled_only)
+    if name_filter:
+        current = {n: r for n, r in current.items() if name_filter in n}
+        baseline = {n: r for n, r in baseline.items() if name_filter in n}
     if not baseline:
-        print(f"no ratio rows in baseline {baseline_path}; nothing to gate")
+        print(f"no ratio rows in baseline {baseline_path}"
+              + (f" matching filter {name_filter!r}" if name_filter else "")
+              + "; nothing to gate")
         return 0
     failures = []
     for name, base in sorted(baseline.items()):
@@ -124,6 +132,12 @@ def main(argv=None) -> int:
     ap.add_argument("--monitor-floor", type=float, default=0.95,
                     help="absolute events_per_s_ratio floor for "
                          "monitor_overhead rows (<=5%% overhead budget)")
+    ap.add_argument("--filter", default="",
+                    help="only gate rows whose name contains this "
+                         "substring (applied to baseline AND current, so "
+                         "separate benchmark runs — e.g. serving/ vs "
+                         "ppr/ — can gate against one committed baseline "
+                         "without tripping missing-row failures)")
     args = ap.parse_args(argv)
     rc = check_monitor_floor(args.current, args.monitor_floor)
     baseline = args.baseline or latest_baseline(
@@ -133,7 +147,8 @@ def main(argv=None) -> int:
         return rc
     print(f"baseline: {baseline}")
     return check(args.current, baseline, args.tolerance,
-                 modeled_only=not args.all_ratios) or rc
+                 modeled_only=not args.all_ratios,
+                 name_filter=args.filter) or rc
 
 
 if __name__ == "__main__":

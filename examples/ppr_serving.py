@@ -9,19 +9,44 @@ graph, and scores index answers against the exact solver.  Exits
 non-zero if the repair invariants or the accuracy floor fail.
 
     PYTHONPATH=src python examples/ppr_serving.py
+
+With ``--mesh N`` the engine shards the index over an N-way ``model``
+mesh (ppr/shard.py): builds, repairs and queries then run per shard
+under shard_map, and the final sharded index must *unshard* to exactly
+the single-device fresh build — the mesh CI smoke runs this under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8 --mesh 4``.
 """
+import argparse
 import sys
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 import repro  # noqa: F401
 from repro.core.extensions import personalized_pagerank
 from repro.graph.generators import rmat_edges
 from repro.graph.structure import from_coo
-from repro.ppr import IndexConfig, build_walk_index, precision_at_k
+from repro.ppr import (IndexConfig, ShardedWalkIndex, build_walk_index,
+                       precision_at_k, unshard_walk_index)
 from repro.serve import (IngestQueue, QueryClient, RankStore, ServeEngine,
                          ServeMetrics)
+
+ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+ap.add_argument("--mesh", type=int, default=0,
+                help="shard the walk index over an N-way model mesh "
+                     "(0 = single-device index)")
+ap.add_argument("--events", type=int, default=200)
+args = ap.parse_args()
+
+mesh = None
+if args.mesh > 0:
+    if len(jax.devices()) < args.mesh:
+        ap.error(f"--mesh {args.mesh} needs {args.mesh} devices but only "
+                 f"{len(jax.devices())} are visible (on CPU set "
+                 "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:args.mesh]),
+                             ("model",))
 
 edges, n = rmat_edges(8, 8, seed=42)                  # 256 vertices
 graph = from_coo(edges[:, 0], edges[:, 1], n,
@@ -32,12 +57,12 @@ metrics = ServeMetrics()
 ingest = IngestQueue(flush_size=32, flush_interval=0.0)
 store = RankStore()
 engine = ServeEngine(graph, ingest, store, metrics=metrics,
-                     method="frontier_prune", ppr_index=cfg)
+                     method="frontier_prune", ppr_index=cfg, mesh=mesh)
 engine.bootstrap()                                    # builds the index
 client = QueryClient(store, ingest, metrics, min_effective_walks=256)
 
 rng = np.random.default_rng(0)
-for _ in range(200):                                  # stream edge events
+for _ in range(args.events):                          # stream edge events
     u, v = rng.integers(0, n, size=2)
     if u != v:
         ingest.submit_insert(int(u), int(v))
@@ -46,17 +71,26 @@ engine.drain()
 
 snap = store.snapshot()
 m = metrics.as_dict()
+kind = (f"sharded x{snap.ppr_index.num_shards}"
+        if isinstance(snap.ppr_index, ShardedWalkIndex) else "single")
 print(f"generation {snap.generation}, events {m['events_applied']}, "
-      f"walks resampled {m['walks_resampled']}")
+      f"walks resampled {m['walks_resampled']}, index {kind}")
+if mesh is not None and not isinstance(snap.ppr_index, ShardedWalkIndex):
+    print("FAIL: mesh engine did not shard the walk index")
+    sys.exit(1)
 
 # repair across the whole stream == one fresh build on the final graph
+# (a sharded index must unshard to the very same array)
 fresh = build_walk_index(snap.graph, cfg)
-if not bool(jnp.all(snap.ppr_index.steps == fresh.steps)):
+served = snap.ppr_index
+steps = (unshard_walk_index(served).steps
+         if isinstance(served, ShardedWalkIndex) else served.steps)
+if not bool(jnp.all(steps == fresh.steps)):
     print("FAIL: repaired index differs from a fresh build")
     sys.exit(1)
 
 # index answers vs the exact DF-P oracle on warm seeds
-deg = np.asarray(snap.ppr_index.csr.deg)
+deg = np.asarray(served.csr.deg)
 seeds = rng.choice(np.flatnonzero(deg >= 4), 6, replace=False)
 precisions = []
 for s in seeds:

@@ -1,0 +1,39 @@
+"""jnp oracle for the walk-repair kernel — same hop recurrence, no
+bucketing.  Output is bitwise identical to ``walk_repair.resample_rows``
+with every bucket active; the differential tests and the off-TPU
+shard_map path (DESIGN.md §9) lean on it the way the SpMV shard path
+leans on ``frontier_spmv_ref_padded``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.structure import CSRView
+
+
+@partial(jax.jit, static_argnames=("alpha",))
+def resample_rows_ref(csr: CSRView, rows: jax.Array, t0: jax.Array,
+                      u: jax.Array, *, alpha: float) -> jax.Array:
+    C, L = rows.shape
+    if L == 1:
+        return rows
+    E = csr.indices.shape[0]
+    rows0 = rows[:, 0]
+    cur = jnp.maximum(rows0, 0)
+    alive = rows0 >= 0
+    out = [rows0]
+    for t in range(1, L):
+        alive = alive & (u[:, t - 1, 0] < alpha)
+        deg = csr.deg[cur]
+        j = jnp.minimum(
+            (u[:, t - 1, 1] * (deg + 1).astype(jnp.float32))
+            .astype(jnp.int32), deg)
+        idx = jnp.clip(csr.indptr[cur] + j, 0, E - 1)
+        nxt = jnp.where(j >= deg, cur, csr.indices[idx])
+        val = jnp.where(t <= t0, rows[:, t], jnp.where(alive, nxt, -1))
+        cur = jnp.where(val >= 0, val, cur)
+        out.append(val)
+    return jnp.stack(out, axis=1)

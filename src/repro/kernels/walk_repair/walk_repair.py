@@ -1,0 +1,128 @@
+"""Bucketed suffix-resampling kernel for stale PPR walks.
+
+Repair of a walk index (repro.ppr.repair) is embarrassingly parallel per
+walk: every stale walk keeps its prefix [0..t0] and re-rolls the suffix
+on the new CSR with its own per-hop uniforms.  This kernel packs the
+compacted stale walks into lane buckets of ``WALK_BUCKET`` (= 128, one
+vector lane per walk) and gives each grid program one bucket; the CSR
+arrays are prefetched whole into VMEM and gathered per hop — the same
+shape of device-side gather the frontier SpMV kernel uses for its rank
+block.
+
+Bucket gating follows the gated-DMA idiom of ``frontier_spmv_padded``:
+the walk capacity is a pow2 that can far exceed the actual stale count,
+so grid steps past the last active bucket re-map (scalar-prefetch
+index_map) onto that bucket — its blocks stay VMEM-resident and the
+revisit recomputes identical values, so excess steps cost no HBM
+traffic.  Columns past the active count hold sentinel walks whose rows
+the caller scatters with mode="drop".
+
+Bitwise contract — the invariant everything downstream leans on: the
+per-hop uniforms are threefry draws, and running threefry inside the
+kernel would not be bit-identical to the jnp path, so the caller
+precomputes them (walks._walk_draws) and passes ``u``.  What remains in
+the kernel is the pure CSR hop recurrence — integer gathers plus one
+f32 multiply — which is IEEE-identical to ``repair._resample_impl``, so
+kernel repair == jnp repair == fresh rebuild, bit for bit.
+
+Off-TPU note (DESIGN.md §9): interpret-mode Pallas is not SPMD-safe
+under shard_map on jax 0.4.x; ppr/shard.py only enables this kernel
+inside shard_map when the backend is real TPU.  Single-device interpret
+use (tests, bench) is fine.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.graph.structure import CSRView
+
+WALK_BUCKET = 128      # walks per grid program — one per vector lane
+
+
+def _kernel(sel_ref,                                  # scalar prefetch
+            indptr_ref, indices_ref, deg_ref,         # CSR, VMEM-resident
+            rows_ref, t0_ref, ucont_ref, uchoice_ref,  # per-bucket walks
+            out_ref, *, alpha, max_len, num_edges):
+    rows0 = rows_ref[0, :]
+    cur = jnp.maximum(rows0, 0)
+    t0 = t0_ref[0, :]
+    alive = rows0 >= 0
+    out_ref[0, :] = rows0
+    # static hop loop: L is small (≈16-20) and fixed per executable
+    for t in range(1, max_len):
+        alive = alive & (ucont_ref[t - 1, :] < alpha)
+        deg = jnp.take(deg_ref[:], cur)
+        j = jnp.minimum(
+            (uchoice_ref[t - 1, :]
+             * (deg + 1).astype(jnp.float32)).astype(jnp.int32), deg)
+        idx = jnp.clip(jnp.take(indptr_ref[:], cur) + j, 0, num_edges - 1)
+        nxt = jnp.where(j >= deg, cur, jnp.take(indices_ref[:], idx))
+        val = jnp.where(t <= t0, rows_ref[t, :],
+                        jnp.where(alive, nxt, -1))
+        cur = jnp.where(val >= 0, val, cur)
+        out_ref[t, :] = val
+
+
+@partial(jax.jit, static_argnames=("alpha", "interpret"))
+def resample_rows(csr: CSRView, rows: jax.Array, t0: jax.Array,
+                  u: jax.Array, *, alpha: float,
+                  num_active: jax.Array | None = None,
+                  interpret: bool = False) -> jax.Array:
+    """Re-walk ``rows`` (int32[C, L]) on ``csr``, keeping each row's
+    prefix [0..t0]; ``u`` f32[C, L-1, 2] are the precomputed per-hop
+    uniforms ([..., 0] continue, [..., 1] choice).  ``num_active`` gates
+    trailing buckets off (rows past it must be sentinels the caller
+    drops).  Returns int32[C, L].
+    """
+    C, L = rows.shape
+    if L == 1:
+        return rows
+    wb = WALK_BUCKET
+    nb = -(-C // wb)
+    cp = nb * wb
+    if cp > C:
+        rows = jnp.concatenate(
+            [rows, jnp.full((cp - C, L), -1, jnp.int32)])
+        t0 = jnp.concatenate([t0, jnp.zeros((cp - C,), jnp.int32)])
+        u = jnp.concatenate([u, jnp.zeros((cp - C, L - 1, 2), jnp.float32)])
+    rows_t = rows.T                                       # [L, Cp]
+    t0_r = t0[None, :]                                    # [1, Cp]
+    ucont = u[:, :, 0].T                                  # [L-1, Cp]
+    uchoice = u[:, :, 1].T
+    E = csr.indices.shape[0]
+    n_ptr, n_deg = csr.indptr.shape[0], csr.deg.shape[0]
+
+    if num_active is None:
+        num_active = jnp.int32(cp)
+    nact_b = jnp.clip((num_active + wb - 1) // wb, 1, nb).astype(jnp.int32)
+    bidx = jnp.arange(nb, dtype=jnp.int32)
+    sel = jnp.where(bidx < nact_b, bidx, nact_b - 1).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((n_ptr,), lambda i, sel: (0,)),
+            pl.BlockSpec((E,), lambda i, sel: (0,)),
+            pl.BlockSpec((n_deg,), lambda i, sel: (0,)),
+            pl.BlockSpec((L, wb), lambda i, sel: (0, sel[i])),
+            pl.BlockSpec((1, wb), lambda i, sel: (0, sel[i])),
+            pl.BlockSpec((L - 1, wb), lambda i, sel: (0, sel[i])),
+            pl.BlockSpec((L - 1, wb), lambda i, sel: (0, sel[i])),
+        ],
+        out_specs=pl.BlockSpec((L, wb), lambda i, sel: (0, sel[i])),
+    )
+    out = pl.pallas_call(
+        partial(_kernel, alpha=alpha, max_len=L, num_edges=E),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((L, cp), jnp.int32),
+        interpret=interpret,
+    )(sel, csr.indptr, csr.indices, csr.deg, rows_t, t0_r, ucont, uchoice)
+    # blocks of gated-off buckets are undefined — their columns hold
+    # sentinel walks the caller scatters with mode="drop"
+    return out.T[:C]

@@ -64,7 +64,10 @@ def main(argv=None):
     ap.add_argument("--ppr-walks", type=int, default=0,
                     help="maintain a PPR walk index with R walks/vertex "
                          "(0 = off); query bursts then include an "
-                         "index-backed personalized top-k")
+                         "index-backed personalized top-k; combined with "
+                         "--mesh the index is range-sharded over the "
+                         "mesh's model axis and repaired per shard "
+                         "(DESIGN.md §14)")
     ap.add_argument("--ppr-len", type=int, default=16,
                     help="walk-index max length L (with --ppr-walks)")
     ap.add_argument("--mesh", choices=["none", "test", "production"],

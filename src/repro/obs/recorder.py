@@ -25,9 +25,13 @@ a window from its anchor reproduces every published rank vector
 **bit-for-bit** — verified digest-by-digest.  The one stateful input,
 an injected *rank* fault, is recorded and re-applied; *event* faults
 corrupt the update before it is recorded, so the recorded stream
-already contains them.  Out of scope: the sharded mesh path and the
-PPR walk index (their device state is not anchored; ``replay`` refuses
-rather than diverging silently).
+already contains them.  A single-device PPR walk index replays too:
+the manifest anchors its *identity* (statics + base PRNG key), and
+walk sampling is a pure function of (graph, identity), so the replayed
+engine rebuilds the index bit-identically from the anchor graph and
+repairs it through the window exactly as the live engine did.  Out of
+scope: the sharded mesh path (per-shard packed/walk device state is
+not anchored; ``replay`` refuses rather than diverging silently).
 
 ``dump()`` writes an **incident bundle** directory::
 
@@ -66,6 +70,18 @@ _ANCHOR_DIR = "anchor"
 # PackedGraph array leaves, in dataclass field order
 _PACKED_LEAVES = ("src", "dst_rel", "valid", "window", "entry_start",
                   "sorted_key", "sorted_lane", "ovl_key", "ovl_lane")
+
+
+def _ppr_config(engine) -> Optional[dict]:
+    """JSON-serializable identity of the engine's walk index (either
+    index type), or None.  Everything that determines the sampled walks
+    besides the graph — enough for replay to rebuild bit-identically."""
+    idx = getattr(engine, "_ppr", None)
+    if idx is None:
+        return None
+    return dict(num_walks=int(idx.num_walks), max_len=int(idx.max_len),
+                alpha=float(idx.alpha),
+                key=[int(x) for x in np.asarray(idx.key)])
 
 
 class BatchRecord(NamedTuple):
@@ -115,7 +131,7 @@ class FlightRecorder:
             edge_capacity=int(engine._graph.edge_capacity),
             ingest_capacity=int(getattr(engine.ingest, "capacity", 8)),
             mesh=engine.mesh is not None,
-            ppr=engine._ppr is not None,
+            ppr=_ppr_config(engine),
             pr_kw={k: v for k, v in engine.pr_kw.items()
                    if isinstance(v, scal)},
             kernel_kw={k: v for k, v in engine._kernel_kw.items()
@@ -350,8 +366,9 @@ def replay(source, end_gen: Optional[int] = None) -> ReplayReport:
 
     ``source`` is a live ``FlightRecorder`` or an incident-bundle
     directory written by ``dump()``.  Raises ``NotImplementedError``
-    for configurations whose device state is not anchored (sharded
-    mesh, PPR index) — see the module docstring.
+    for configurations whose device state is not anchored (the sharded
+    mesh path, and legacy bundles that recorded only that a PPR index
+    existed without its identity) — see the module docstring.
     """
     if isinstance(source, (str, os.PathLike)):
         cfg, a, state, a_seq, recs, _ = load_bundle(os.fspath(source))
@@ -367,10 +384,14 @@ def replay(source, end_gen: Optional[int] = None) -> ReplayReport:
         raise NotImplementedError(
             "replay of the sharded mesh path is not supported: per-shard "
             "packed state is not anchored (DESIGN.md §12)")
-    if cfg.get("ppr"):
+    pcfg = cfg.get("ppr")
+    if pcfg is True:
+        # pre-identity bundle: we know an index existed but not its key,
+        # so it cannot be reconstructed — the old blanket refusal stands
         raise NotImplementedError(
-            "replay with a live PPR walk index is not supported: walk "
-            "state is not anchored (DESIGN.md §12)")
+            "replay with a live PPR walk index needs the index identity "
+            "in the bundle config; this legacy bundle predates it "
+            "(DESIGN.md §12)")
     if not recs:
         raise ValueError("no records to replay in the requested window")
 
@@ -417,6 +438,21 @@ def replay(source, end_gen: Optional[int] = None) -> ReplayReport:
             max_entries_per_window=int(ps["max_entries_per_window"]))
         engine._pack_kw["max_entries_per_window"] = \
             int(ps["max_entries_per_window"])
+    if pcfg:
+        # rebuild the walk index on the anchor graph from its recorded
+        # identity — bitwise what the live engine held at the anchor
+        # (sampling is a pure function of (graph, identity)), so the
+        # per-batch repairs re-run inside engine.step just as they did
+        from repro.ppr.walks import WalkIndex, _build_steps
+        key = jnp.asarray(pcfg["key"], jnp.uint32)
+        csr = graph.to_device_csr()
+        engine._ppr = WalkIndex(
+            steps=_build_steps(csr, key, int(cfg["num_vertices"]),
+                               int(pcfg["num_walks"]),
+                               int(pcfg["max_len"]),
+                               float(pcfg["alpha"])),
+            csr=csr, key=key, num_walks=int(pcfg["num_walks"]),
+            max_len=int(pcfg["max_len"]), alpha=float(pcfg["alpha"]))
     engine.bootstrap(ranks=jnp.asarray(state["ranks"]), last_seq=a_seq)
 
     steps: List[ReplayStep] = []

@@ -11,6 +11,11 @@ frontier.  See DESIGN.md §6.
     index = build_walk_index(graph, IndexConfig(num_walks=32))
     verts, est = ppr_top_k(index, seeds=[7], k=10)        # fast path
     index, resampled = repair_walk_index(index, graph_new, touched)
+
+Mesh scale (DESIGN.md §14): ``build_sharded_walk_index`` partitions the
+steps array by start-vertex range over the ``model`` mesh axis; repair
+and queries then run per shard under shard_map, bitwise equal to the
+single-device path.
 """
 from repro.ppr.estimator import (DEFAULT_MIN_EFFECTIVE_WALKS, diagnostics,
                                  effective_walks, error_bound,
@@ -18,11 +23,18 @@ from repro.ppr.estimator import (DEFAULT_MIN_EFFECTIVE_WALKS, diagnostics,
                                  walks_for_error)
 from repro.ppr.query import ppr_estimate, ppr_top_k
 from repro.ppr.repair import repair_walk_index, stale_walks
+from repro.ppr.shard import (ShardedWalkIndex, WalkShardSpec,
+                             build_sharded_walk_index,
+                             repair_walk_index_sharded, shard_stale_counts,
+                             shard_walk_index, unshard_walk_index)
 from repro.ppr.walks import IndexConfig, WalkIndex, build_walk_index
 
 __all__ = [
-    "DEFAULT_MIN_EFFECTIVE_WALKS", "IndexConfig", "WalkIndex",
+    "DEFAULT_MIN_EFFECTIVE_WALKS", "IndexConfig", "ShardedWalkIndex",
+    "WalkIndex", "WalkShardSpec", "build_sharded_walk_index",
     "build_walk_index", "diagnostics", "effective_walks", "error_bound",
     "ppr_estimate", "ppr_top_k", "precision_at_k", "repair_walk_index",
-    "stale_walks", "truncation_bias", "walks_for_error",
+    "repair_walk_index_sharded", "shard_stale_counts", "shard_walk_index",
+    "stale_walks",
+    "truncation_bias", "unshard_walk_index", "walks_for_error",
 ]

@@ -48,15 +48,31 @@ _MIN_NBR_CAP = 8
 _MAX_NBR_WIDTH = 1024   # neighbour-slab width cap (memory + compile bound)
 
 
+def _counts_local(steps: jax.Array, sources: jax.Array, weights: jax.Array,
+                  v_start: jax.Array, num_vertices: int) -> jax.Array:
+    """f64[V] visit counts contributed by the rows of one start-vertex
+    range [v_start, v_start + steps.shape[0]): sources outside the range
+    are masked to zero weight, so summing (or psum-ing) the per-range
+    results over all ranges reproduces the full aggregation — the
+    sharded query path of ppr/shard.py.  With ``v_start=0`` and a
+    full-index ``steps`` this *is* the single-device aggregation."""
+    vps = steps.shape[0]
+    loc = sources - v_start
+    own = (loc >= 0) & (loc < vps)
+    sel = steps[jnp.clip(loc, 0, vps - 1)]                # [B, R, L]
+    w = jnp.where(own[:, None, None] & (sel >= 0),
+                  weights[:, None, None], 0.0)
+    return jax.ops.segment_sum(
+        w.ravel(), jnp.clip(sel, 0, num_vertices - 1).ravel(),
+        num_segments=num_vertices)
+
+
 def _counts(steps: jax.Array, sources: jax.Array, weights: jax.Array
             ) -> jax.Array:
     """f64[V] Σ over walk positions of the gathered ``sources`` rows,
     each position weighted by its source's scalar weight."""
     V = steps.shape[0]
-    sel = steps[jnp.clip(sources, 0, V - 1)]              # [B, R, L]
-    w = jnp.where(sel >= 0, weights[:, None, None], 0.0)
-    return jax.ops.segment_sum(
-        w.ravel(), jnp.clip(sel, 0, V - 1).ravel(), num_segments=V)
+    return _counts_local(steps, sources, weights, jnp.int32(0), V)
 
 
 @partial(jax.jit, static_argnames=("normalize",))
@@ -72,15 +88,18 @@ def _direct_estimate(steps: jax.Array, alpha: float, seeds_idx: jax.Array,
     return est
 
 
-@partial(jax.jit, static_argnames=("width",))
-def _unrolled_chunk(steps: jax.Array, indptr: jax.Array,
-                    indices: jax.Array, deg: jax.Array, alpha: float,
-                    seeds_idx: jax.Array, seeds_mask: jax.Array,
-                    offset: jax.Array, width: int) -> jax.Array:
-    """Visit counts of neighbour columns [offset, offset+width) of each
-    seed's CSR row — one bounded-size slab of the unrolled estimator."""
-    V, R, _ = steps.shape
+@partial(jax.jit, static_argnames=("width", "num_walks"))
+def _nbr_slab(indptr: jax.Array, indices: jax.Array, deg: jax.Array,
+              alpha: float, seeds_idx: jax.Array, seeds_mask: jax.Array,
+              offset: jax.Array, width: int, num_walks: int
+              ) -> Tuple[jax.Array, jax.Array]:
+    """(sources int32[S·width], weights f64[S·width]): neighbour columns
+    [offset, offset+width) of each seed's CSR row with their per-walk-
+    position weights — the graph-side half of one unrolled-estimator
+    slab, shared by the single-device and sharded count paths."""
+    V = deg.shape[0]
     E = indices.shape[0]
+    R = num_walks
     n_seeds = jnp.maximum(jnp.sum(seeds_mask.astype(jnp.float64)), 1.0)
     d = deg[jnp.clip(seeds_idx, 0, V - 1)]                # [S]
     z = 1.0 - alpha / (d + 1.0)                           # closed-form denom
@@ -94,7 +113,19 @@ def _unrolled_chunk(steps: jax.Array, indptr: jax.Array,
                       alpha * (1.0 - alpha)
                       / ((d[:, None] + 1.0) * z[:, None] * R * n_seeds),
                       0.0)
-    return _counts(steps, nbr.ravel(), w_nbr.ravel().astype(jnp.float64))
+    return nbr.ravel(), w_nbr.ravel().astype(jnp.float64)
+
+
+@partial(jax.jit, static_argnames=("width",))
+def _unrolled_chunk(steps: jax.Array, indptr: jax.Array,
+                    indices: jax.Array, deg: jax.Array, alpha: float,
+                    seeds_idx: jax.Array, seeds_mask: jax.Array,
+                    offset: jax.Array, width: int) -> jax.Array:
+    """Visit counts of neighbour columns [offset, offset+width) of each
+    seed's CSR row — one bounded-size slab of the unrolled estimator."""
+    nbr, w_nbr = _nbr_slab(indptr, indices, deg, alpha, seeds_idx,
+                           seeds_mask, offset, width, steps.shape[1])
+    return _counts(steps, nbr, w_nbr)
 
 
 @jax.jit
@@ -157,7 +188,15 @@ def ppr_estimate(index: WalkIndex, seeds: Sequence[int],
                  normalize: bool = True, unroll: bool = True) -> jax.Array:
     """f64[V] estimated PPR vector for a seed set (uniform teleport over
     the seeds).  ``normalize=True`` rescales to a distribution (absorbs
-    the α^L truncation tail); top-k is unaffected either way."""
+    the α^L truncation tail); top-k is unaffected either way.
+
+    Accepts a ``ShardedWalkIndex`` too: the aggregation then runs per
+    shard over that shard's rows with one psum of the f64[V] estimate —
+    the walk arrays never leave their shards (ppr/shard.py)."""
+    if not isinstance(index, WalkIndex):
+        from repro.ppr.shard import sharded_ppr_estimate
+        return sharded_ppr_estimate(index, seeds, normalize=normalize,
+                                    unroll=unroll)
     idx, mask = _pad_seeds(seeds, index.num_vertices)
     if not unroll:
         return _direct_estimate(index.steps, index.alpha, idx, mask,

@@ -115,13 +115,28 @@ def _transition(csr: CSRView, cur: jax.Array, choice: jax.Array) -> jax.Array:
 
 
 @partial(jax.jit,
-         static_argnames=("num_vertices", "num_walks", "max_len", "alpha"))
-def _build_steps(csr: CSRView, key: jax.Array, num_vertices: int,
-                 num_walks: int, max_len: int, alpha: float) -> jax.Array:
-    V, R, L = num_vertices, num_walks, max_len
-    N = V * R
-    walk_keys = _walk_keys(key, jnp.arange(N, dtype=jnp.uint32))
-    cur0 = jnp.repeat(jnp.arange(V, dtype=jnp.int32), R)
+         static_argnames=("num_vertices", "num_local", "num_walks",
+                          "max_len", "alpha"))
+def _build_steps_range(csr: CSRView, key: jax.Array, v_start: jax.Array,
+                       num_vertices: int, num_local: int, num_walks: int,
+                       max_len: int, alpha: float) -> jax.Array:
+    """Rows [v_start, v_start + num_local) of the full build, sampled with
+    **global** walk ids — bitwise equal to the same slice of a full-index
+    build, which is what lets a per-shard build (ppr/shard.py) reproduce
+    ``_build_steps`` exactly.  ``v_start`` may be traced (it comes from
+    ``lax.axis_index`` under shard_map).  Rows whose global vertex id
+    falls at or past ``num_vertices`` (shard padding) come out all ``-1``:
+    the sentinel keeps them invisible to staleness and queries.
+    """
+    R, L = num_walks, max_len
+    Nl = num_local * R
+    v_start = jnp.asarray(v_start, jnp.int32)
+    gids = (v_start.astype(jnp.uint32) * jnp.uint32(R)
+            + jnp.arange(Nl, dtype=jnp.uint32))
+    walk_keys = _walk_keys(key, gids)
+    vloc = v_start + jnp.arange(num_local, dtype=jnp.int32)
+    valid = jnp.repeat(vloc < num_vertices, R)
+    cur0 = jnp.repeat(jnp.clip(vloc, 0, num_vertices - 1), R)
 
     def hop(carry, t):
         cur, alive = carry
@@ -131,10 +146,19 @@ def _build_steps(csr: CSRView, key: jax.Array, num_vertices: int,
         cur = jnp.where(alive, nxt, cur)
         return (cur, alive), jnp.where(alive, cur, -1)
 
-    _, tail = jax.lax.scan(hop, (cur0, jnp.ones((N,), bool)),
+    _, tail = jax.lax.scan(hop, (cur0, valid),
                            jnp.arange(1, L, dtype=jnp.int32))
-    steps = jnp.concatenate([cur0[None, :], tail], axis=0)   # [L, N]
-    return steps.T.reshape(V, R, L)
+    head = jnp.where(valid, cur0, -1)
+    steps = jnp.concatenate([head[None, :], tail], axis=0)   # [L, Nl]
+    return steps.T.reshape(num_local, R, L)
+
+
+@partial(jax.jit,
+         static_argnames=("num_vertices", "num_walks", "max_len", "alpha"))
+def _build_steps(csr: CSRView, key: jax.Array, num_vertices: int,
+                 num_walks: int, max_len: int, alpha: float) -> jax.Array:
+    return _build_steps_range(csr, key, jnp.int32(0), num_vertices,
+                              num_vertices, num_walks, max_len, alpha)
 
 
 def build_walk_index(graph: EdgeListGraph,

@@ -111,13 +111,24 @@ from repro.graph.dynamic import apply_batch, touched_vertices_mask
 from repro.graph.structure import EdgeListGraph
 from repro.obs import trace as obs_trace
 from repro.obs.frontier import FrontierTelemetry
-from repro.ppr import IndexConfig, WalkIndex, build_walk_index, \
-    repair_walk_index
+from repro.ppr import IndexConfig, ShardedWalkIndex, WalkIndex, \
+    build_sharded_walk_index, build_walk_index, repair_walk_index, \
+    repair_walk_index_sharded
 from repro.serve.ingest import IngestQueue
 from repro.serve.metrics import ServeMetrics
 from repro.serve.state import RankStore
 
 DYNAMIC_METHODS = ("naive", "traversal", "frontier", "frontier_prune")
+
+# host-sync round trips the serve loop has issued (block_until_ready
+# calls) — tests assert exactly one per step, PPR repair or not
+import collections as _collections
+SYNC_COUNTS: _collections.Counter = _collections.Counter()
+
+
+def _block(x) -> None:
+    SYNC_COUNTS["block_until_ready"] += 1
+    jax.block_until_ready(x)
 
 # serving pack defaults: smaller entries than the offline DEFAULT_BE=2048
 # keep the per-window spill reservation (and the padded-lane overhead the
@@ -166,15 +177,17 @@ class ServeEngine:
         self._sharded = None   # dist.ShardedKernelEngine (kernel + mesh)
         self.static_fallback_frac = static_fallback_frac
         # opt-in walk index (repro.ppr): an IndexConfig to build at
-        # bootstrap, or a prebuilt WalkIndex valid for `graph`
+        # bootstrap (sharded over `mesh` when one is given), or a prebuilt
+        # WalkIndex / ShardedWalkIndex valid for `graph`
         self._ppr_cfg: Optional[IndexConfig] = None
-        self._ppr: Optional[WalkIndex] = None
+        self._ppr = None
         if isinstance(ppr_index, IndexConfig):
             self._ppr_cfg = ppr_index
-        elif isinstance(ppr_index, WalkIndex):
+        elif isinstance(ppr_index, (WalkIndex, ShardedWalkIndex)):
             self._ppr = ppr_index
         elif ppr_index is not None:
-            raise TypeError("ppr_index must be an IndexConfig or WalkIndex")
+            raise TypeError("ppr_index must be an IndexConfig, WalkIndex "
+                            "or ShardedWalkIndex")
         # frontier telemetry: None = follow the global tracer (rows are
         # recorded exactly when a trace is being taken), True/False pins
         # it.  Toggling retraces the solve loops once (static jit flag).
@@ -277,7 +290,11 @@ class ServeEngine:
             self._packed = dataclasses.replace(
                 self._packed, max_entries_per_window=cap)
         if self._ppr_cfg is not None and self._ppr is None:
-            self._ppr = build_walk_index(self._graph, self._ppr_cfg)
+            if self.mesh is not None:
+                self._ppr = build_sharded_walk_index(
+                    self._graph, self._ppr_cfg, mesh=self.mesh)
+            else:
+                self._ppr = build_walk_index(self._graph, self._ppr_cfg)
         self._ranks = ranks
         seq = self.ingest.start_seq - 1 if last_seq is None else last_seq
         gen = self.store.publish(self._graph, ranks, seq,
@@ -457,13 +474,19 @@ class ServeEngine:
             # walk invalidation — stale suffixes resample on Gᵗ
             touched = touched_vertices_mask(batch.update,
                                             graph_new.num_vertices)
-            self._ppr, resampled = repair_walk_index(self._ppr, graph_new,
-                                                     touched)
-        jax.block_until_ready(res.ranks)
-        if self._ppr is not None:
-            # repair kernels were enqueued after the rank update; the
-            # reported batch latency must cover them too
-            jax.block_until_ready(self._ppr.steps)
+            if isinstance(self._ppr, ShardedWalkIndex):
+                self._ppr, resampled = repair_walk_index_sharded(
+                    self._ppr, graph_new, touched)
+            else:
+                self._ppr, resampled = repair_walk_index(
+                    self._ppr, graph_new, touched)
+        # one host sync covers the batch: the repair kernels (when any
+        # walk actually resampled) were enqueued after the rank update,
+        # so waiting on both keeps the reported latency honest without a
+        # second device round trip — and a no-stale batch never touches
+        # the (unchanged) steps buffer at all
+        _block((res.ranks, self._ppr.steps) if resampled > 0
+               else res.ranks)
         latency = self._clock() - t0
         self._graph, self._ranks = graph_new, res.ranks
         with tr.span("snapshot.publish"):

@@ -20,6 +20,11 @@ function of (graph, config seed), so a replica configured with the
 writer's ``IndexConfig`` repairs its index from each delta's touched
 set (``repair_walk_index``) and stays bit-identical to the writer's
 without any walk data on the wire (DESIGN.md §6 determinism contract).
+Anchors carry the writer's index *identity* (statics + base key): a
+resyncing replica whose live index matches it heals by repairing the
+walks crossing the edge slots the anchor graph rewrote — same bitwise
+result as the from-scratch rebuild this path used to run, at the cost
+of the missed deltas instead of O(V·R·L).
 
 Periodic full-state **anchors** reuse the flight-recorder anchor format
 (obs/recorder.py: ``ranks`` + ``graph_*`` host arrays): a late joiner
@@ -56,6 +61,7 @@ import time
 import zlib
 from typing import Dict, List, NamedTuple, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -96,6 +102,12 @@ class AnchorMsg(NamedTuple):
     generation: int
     last_seq: int
     state: Dict[str, np.ndarray]   # ranks + graph_* (obs/recorder.py)
+    # walk-index identity of the writer's index at this generation
+    # (num_walks/max_len/alpha/key) — lets a resyncing replica prove its
+    # own index shares the writer's PRNG stream and *repair* it against
+    # the anchor graph instead of rebuilding from scratch; None when the
+    # writer serves no PPR
+    ppr: Optional[Dict] = None
 
 
 class Heartbeat(NamedTuple):
@@ -125,6 +137,36 @@ def _graph_from_anchor(state: Dict[str, np.ndarray],
         valid=jnp.asarray(state["graph_valid"]),
         num_vertices=num_vertices,
         num_edges=jnp.asarray(state["graph_num_edges"]))
+
+
+def _ppr_identity(index) -> Optional[Dict]:
+    """Wire-format identity of a walk index (WalkIndex or
+    ShardedWalkIndex): the statics plus the base PRNG key — everything
+    that determines the sampled walks besides the graph itself."""
+    if index is None:
+        return None
+    return dict(num_walks=int(index.num_walks),
+                max_len=int(index.max_len),
+                alpha=float(index.alpha),
+                key=[int(x) for x in np.asarray(index.key)])
+
+
+def _edge_diff_touched(old: EdgeListGraph, new: EdgeListGraph,
+                       num_vertices: int) -> jnp.ndarray:
+    """bool[V]: src endpoints of every edge slot that differs between the
+    two edge lists.  The anchor graph differs from the replica's only at
+    the slots the missed deltas rewrote, so this is a superset of the
+    union of their ``touched_vertices_mask``es — and any covering
+    superset keeps walk repair bitwise equal to a fresh rebuild (only
+    extra walks get (identically) resampled)."""
+    diff = ((old.src != new.src) | (old.dst != new.dst)
+            | (old.valid != new.valid))
+    m = jnp.zeros((num_vertices,), bool)
+    hit_old = diff & old.valid
+    hit_new = diff & new.valid
+    m = m.at[jnp.where(hit_old, old.src, 0)].max(hit_old)
+    m = m.at[jnp.where(hit_new, new.src, 0)].max(hit_new)
+    return m
 
 
 # ---- writer side ---------------------------------------------------------
@@ -166,7 +208,8 @@ class ReplicationWriter:
         self._prev = np.asarray(snap.ranks)
         self._anchor = AnchorMsg(
             self.epoch, self.next_seq - 1, snap.generation, snap.last_seq,
-            _anchor_state(snap.graph, snap.ranks))
+            _anchor_state(snap.graph, snap.ranks),
+            _ppr_identity(snap.ppr_index))
         self.anchors_taken += 1
         self.engine.on_publish = self._on_publish
 
@@ -196,7 +239,8 @@ class ReplicationWriter:
         if snap.generation % self.anchor_every == 0:
             self._anchor = AnchorMsg(self.epoch, msg.seq, snap.generation,
                                      msg.last_seq,
-                                     _anchor_state(snap.graph, snap.ranks))
+                                     _anchor_state(snap.graph, snap.ranks),
+                                     _ppr_identity(snap.ppr_index))
             self.anchors_taken += 1
         self.transport.broadcast(self.name, msg, self._clock())
 
@@ -485,7 +529,17 @@ class ReadReplica:
             f"gen={anchor.generation} (epoch {anchor.epoch}): {reason}")
         return True
 
+    def _ppr_identity_matches(self, ident: Optional[Dict]) -> bool:
+        """Does our live index share the anchor's PRNG stream + statics?
+        If so, repairing it on the anchor graph reproduces the writer's
+        index bitwise (same draws, same graph)."""
+        if ident is None or self.ppr is None:
+            return False
+        return _ppr_identity(self.ppr) == dict(
+            ident, key=[int(x) for x in ident["key"]])
+
     def _load_anchor(self, anchor: AnchorMsg) -> None:
+        old_graph = self.graph           # pre-resync graph, for the diff
         self.graph = _graph_from_anchor(anchor.state, self.num_vertices)
         self.ranks = np.asarray(anchor.state["ranks"],
                                 np.float64).copy()
@@ -497,9 +551,24 @@ class ReadReplica:
         self._buffer = {s: m for s, m in self._buffer.items()
                         if m.epoch == self.epoch and s > anchor.seq}
         if self.ppr_cfg is not None:
-            # pure function of (graph, seed): bit-identical to a writer
-            # index without shipping any walk data (DESIGN.md §6)
-            self.ppr = build_walk_index(self.graph, self.ppr_cfg)
+            ident = anchor.ppr
+            if (old_graph is not None
+                    and self._ppr_identity_matches(ident)
+                    and old_graph.src.shape == self.graph.src.shape):
+                # our index is valid for old_graph and provably on the
+                # writer's PRNG stream: repair the walks that cross the
+                # edge slots the missed deltas rewrote — an O(|Δ|·R·L)
+                # heal, not the O(V·R·L) from-scratch rebuild this path
+                # used to do on every resync
+                touched = _edge_diff_touched(old_graph, self.graph,
+                                             self.num_vertices)
+                self.ppr, _ = repair_walk_index(self.ppr, self.graph,
+                                                touched)
+            else:
+                # cold start, config drift, or a legacy anchor without
+                # identity: pure function of (graph, seed), still
+                # bit-identical to the writer (DESIGN.md §6)
+                self.ppr = build_walk_index(self.graph, self.ppr_cfg)
         self._publish()
 
     def bootstrap(self) -> bool:
@@ -627,6 +696,20 @@ class FailoverController:
                                "no alive replica with state")
         engine = self.engine_factory(graph, last_seq=last_seq,
                                      generation=gen)
+        if (promoted is not None and promoted.ppr is not None
+                and getattr(engine, "_ppr", None) is None
+                and getattr(engine, "_ppr_cfg", None) is not None):
+            # the promoted replica's index is already valid for `graph`
+            # and on the configured PRNG stream: hand it to the new
+            # writer so bootstrap skips the O(V·R·L) rebuild that used
+            # to stall failover on large indexes
+            cfg = engine._ppr_cfg
+            want = dict(num_walks=int(cfg.num_walks),
+                        max_len=int(cfg.max_len), alpha=float(cfg.alpha),
+                        key=[int(x) for x in np.asarray(
+                            jax.random.PRNGKey(cfg.seed))])
+            if _ppr_identity(promoted.ppr) == want:
+                engine._ppr = promoted.ppr
         engine.store.seed_generation(gen)
         engine.bootstrap(ranks=jnp.asarray(np.asarray(ranks, np.float64)),
                          last_seq=last_seq)

@@ -374,6 +374,25 @@ def test_replay_refuses_unanchored_configs(tmp_path):
         man["config"][key] = False
 
 
+def test_replay_with_ppr_index_is_bitwise(tmp_path):
+    """Single-device PPR configs replay now that the identity is
+    anchored: the replayed engine rebuilds the same walk index from the
+    recorded (num_walks, max_len, alpha, key) and every step matches
+    bit-for-bit — both from the live recorder and a dumped bundle."""
+    from repro.ppr import IndexConfig
+    mon = _monitor()
+    ingest, store, engine, _ = _service(
+        _graph(), monitor=mon,
+        ppr_index=IndexConfig(num_walks=8, max_len=8, seed=3))
+    engine.bootstrap()
+    _feed(ingest, engine, num_batches=6)
+    assert mon.recorder.config["ppr"]["key"] is not None
+    report = replay(mon.recorder)
+    assert report.ok and report.num_bitwise == 6
+    bundle = mon.recorder.dump(str(tmp_path / "b"))   # JSON round-trip
+    assert replay(bundle).ok
+
+
 # ---------------------------------------------------------------------------
 # monitor wiring: gauges + summary through the engine
 # ---------------------------------------------------------------------------

@@ -15,10 +15,13 @@ from repro.graph.dynamic import (apply_batch, make_batch_update,
                                  touched_vertices_mask)
 from repro.graph.generators import rmat_edges
 from repro.graph.structure import from_coo
-from repro.ppr import (IndexConfig, build_walk_index, diagnostics,
-                       effective_walks, error_bound, ppr_estimate,
-                       ppr_top_k, precision_at_k, repair_walk_index,
-                       stale_walks, truncation_bias, walks_for_error)
+from repro.kernels.pagerank_spmv.shard import ShardCapacityError
+from repro.ppr import (IndexConfig, ShardedWalkIndex, build_sharded_walk_index,
+                       build_walk_index, diagnostics, effective_walks,
+                       error_bound, ppr_estimate, ppr_top_k, precision_at_k,
+                       repair_walk_index, repair_walk_index_sharded,
+                       shard_walk_index, stale_walks, truncation_bias,
+                       unshard_walk_index, walks_for_error)
 from repro.serve import (IngestQueue, QueryClient, RankStore, ServeEngine,
                          ServeMetrics)
 
@@ -340,6 +343,271 @@ def test_query_mode_index_requires_index(small):
     client = QueryClient(store)
     with pytest.raises(ValueError):
         client.personalized_top_k([1], 5, mode="index")
+
+
+# ---------------------------------------------------------------------------
+# sharded index (ppr/shard.py): bitwise parity with the single-device path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_shards", [1, 3, 4])
+def test_sharded_build_matches_single_device(small, index, num_shards):
+    """Per-shard build with global walk ids == the same slice of a full
+    build — including the uneven split (S=3 pads the last shard)."""
+    g, _, n = small
+    cfg = IndexConfig(num_walks=64, max_len=16, seed=3)
+    sharded = build_sharded_walk_index(g, cfg, num_shards=num_shards)
+    want = shard_walk_index(index, num_shards)
+    assert sharded.steps.shape == want.steps.shape
+    assert bool(jnp.all(sharded.steps == want.steps))
+    # unshard round-trips, dropping the padding rows
+    assert bool(jnp.all(unshard_walk_index(sharded).steps == index.steps))
+
+
+@pytest.mark.parametrize("num_shards", [2, 3, 4])
+def test_sharded_repair_bitwise_vs_single_device(small, index, num_shards):
+    """Sharded repair == unshard → single-device repair → reshard, walk
+    for walk — the tentpole's acceptance invariant."""
+    g, _, n = small
+    upd = _batch(small, 7)
+    g2 = apply_batch(g, upd)
+    touched = touched_vertices_mask(upd, n)
+    want, want_n = repair_walk_index(index, g2, touched)
+    got, got_n = repair_walk_index_sharded(
+        shard_walk_index(index, num_shards), g2, touched)
+    assert got_n == want_n > 0
+    assert bool(jnp.all(unshard_walk_index(got).steps == want.steps))
+    assert bool(jnp.all(got.csr.indptr == want.csr.indptr))
+
+
+def test_sharded_repair_chain_over_stream(small):
+    """The serve-loop invariant survives sharding: N sharded repairs ==
+    one fresh single-device build on the final graph."""
+    g, _, n = small
+    cfg = IndexConfig(num_walks=32, max_len=12, seed=11)
+    idx = build_sharded_walk_index(g, cfg, num_shards=4)
+    cur = g
+    for seed in range(4):
+        upd = _batch(small, 100 + seed, n_del=4, n_ins=8)
+        nxt = apply_batch(cur, upd)
+        idx, _ = repair_walk_index_sharded(idx, nxt,
+                                           touched_vertices_mask(upd, n))
+        cur = nxt
+    fresh = build_walk_index(cur, cfg)
+    assert bool(jnp.all(unshard_walk_index(idx).steps == fresh.steps))
+
+
+def test_sharded_repair_capacity_budget(small, index):
+    """Overflowing an explicit per-shard budget raises a checked error
+    naming the shards; check=False degrades (drops) instead — repaired
+    rows are exact, dropped rows are the old rows, nothing corrupt."""
+    from repro.ppr.shard import shard_stale_counts
+    g, _, n = small
+    upd = _batch(small, 3)
+    g2 = apply_batch(g, upd)
+    touched = touched_vertices_mask(upd, n)
+    sharded = shard_walk_index(index, 4)
+    counts = shard_stale_counts(sharded, touched)
+    assert counts.sum() > 0
+    tight = max(1, int(counts.max()) // 2)
+    with pytest.raises(ShardCapacityError) as ei:
+        repair_walk_index_sharded(sharded, g2, touched, capacity=tight)
+    assert ei.value.shards
+    assert all(counts[s] > tight for s in ei.value.shards)
+    got, _ = repair_walk_index_sharded(sharded, g2, touched,
+                                       capacity=tight, check=False,
+                                       min_capacity=1)
+    want, _ = repair_walk_index(index, g2, touched)
+    gu = np.asarray(unshard_walk_index(got).steps)
+    row_old = (gu == np.asarray(index.steps)).all(-1)
+    row_new = (gu == np.asarray(want.steps)).all(-1)
+    assert np.all(row_old | row_new)
+    assert not np.all(row_new)        # something was actually dropped
+    assert not np.all(row_old)        # ... and something repaired
+
+
+def test_sharded_query_matches_single_device(small, index):
+    """Per-shard segment_sum + one (p)sum matches the single-device
+    estimate to f64 rounding; top-k is identical."""
+    sharded = shard_walk_index(index, 4)
+    for unroll in (True, False):
+        est_s = np.asarray(ppr_estimate(sharded, [7, 12], unroll=unroll))
+        est_1 = np.asarray(ppr_estimate(index, [7, 12], unroll=unroll))
+        np.testing.assert_allclose(est_s, est_1, rtol=0, atol=1e-12)
+    vs, _ = ppr_top_k(sharded, [7], 10)
+    v1, _ = ppr_top_k(index, [7], 10)
+    assert vs.tolist() == v1.tolist()
+
+
+def test_sharded_program_cache_bounded(small):
+    """A temporal stream reuses a handful of compiled repair programs
+    (pow2 capacities), mirroring the SpMV shard layer's contract."""
+    import repro.ppr.shard as shard_mod
+    g, _, n = small
+    cfg = IndexConfig(num_walks=32, max_len=12, seed=11)
+    idx = build_sharded_walk_index(g, cfg, num_shards=4)
+    before = dict(shard_mod.TRACE_COUNTS)
+    cur = g
+    for seed in range(5):
+        upd = _batch(small, 300 + seed, n_del=3, n_ins=5)
+        cur = apply_batch(cur, upd)
+        idx, _ = repair_walk_index_sharded(idx, cur,
+                                           touched_vertices_mask(upd, n))
+    delta = {k: shard_mod.TRACE_COUNTS[k] - before.get(k, 0)
+             for k in shard_mod.TRACE_COUNTS}
+    assert delta.get("repairs", 0) == 5
+    # host path: no shard_map programs get built at all
+    assert delta.get("build_repair", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# Pallas walk-repair kernel (kernels/walk_repair): bitwise vs the jnp path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 2])
+def test_kernel_repair_bitwise_matches_jnp(small, index, seed):
+    g, _, n = small
+    upd = _batch(small, seed)
+    g2 = apply_batch(g, upd)
+    touched = touched_vertices_mask(upd, n)
+    want, want_n = repair_walk_index(index, g2, touched)
+    got, got_n = repair_walk_index(index, g2, touched, use_kernel=True,
+                                   interpret=True)
+    assert got_n == want_n > 0
+    assert bool(jnp.all(got.steps == want.steps))
+
+
+def test_kernel_repair_bucket_tail(small, index):
+    """A stale count far from the 128-lane bucket multiple exercises the
+    gated-DMA tail: excess grid steps re-run the last active bucket
+    idempotently and padding lanes stay inert."""
+    g, _, n = small
+    # touch exactly one vertex -> its own R=64 walks + visitors: a
+    # count nowhere near a bucket boundary
+    touched = jnp.zeros((n,), bool).at[7].set(True)
+    want, want_n = repair_walk_index(index, g, touched)
+    got, got_n = repair_walk_index(index, g, touched, use_kernel=True,
+                                   interpret=True)
+    assert got_n == want_n > 0
+    assert bool(jnp.all(got.steps == want.steps))
+
+
+# ---------------------------------------------------------------------------
+# serve integration: mesh engine + the single-host-sync contract
+# ---------------------------------------------------------------------------
+
+def _one_shard_mesh():
+    import jax
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:1]), ("model",))
+
+
+def test_engine_mesh_shards_index_and_repairs(small):
+    """An engine given a mesh builds the index sharded at bootstrap and
+    keeps it bitwise equal to a fresh single-device build while
+    streaming — the in-process 1-way mesh; the 4-way run is the slow
+    subprocess test + the CI mesh smoke lane."""
+    g, _, n = small
+    cfg = IndexConfig(num_walks=16, max_len=12, seed=2)
+    ingest, store, engine, metrics = _service(g, ppr_index=cfg,
+                                              mesh=_one_shard_mesh())
+    engine.bootstrap()
+    assert isinstance(store.snapshot().ppr_index, ShardedWalkIndex)
+    rng = np.random.default_rng(6)
+    for _ in range(32):
+        u, v = rng.integers(0, n, 2)
+        if u != v:
+            ingest.submit_insert(int(u), int(v))
+        engine.step()
+    engine.drain()
+    snap = store.snapshot()
+    fresh = build_walk_index(snap.graph, cfg)
+    assert bool(jnp.all(unshard_walk_index(snap.ppr_index).steps ==
+                        fresh.steps))
+    assert metrics.as_dict()["walks_resampled"] > 0
+
+
+def test_step_issues_single_host_sync(small):
+    """The PPR repair wait is folded into the batch's one
+    block_until_ready: an index-maintaining engine issues exactly as
+    many host syncs per step as one without an index (the serve/engine
+    double-sync bug, fixed)."""
+    import repro.serve.engine as eng_mod
+    g, _, n = small
+    for kw in (dict(),
+               dict(ppr_index=IndexConfig(num_walks=16, max_len=12,
+                                          seed=2))):
+        ingest, store, engine, _ = _service(g, **kw)
+        engine.bootstrap()
+        rng = np.random.default_rng(1)
+        for _ in range(3):
+            u, v = rng.integers(0, n, 2)
+            if u == v:
+                continue
+            ingest.submit_insert(int(u), int(v))
+            before = eng_mod.SYNC_COUNTS["block_until_ready"]
+            assert engine.step(force=True)
+            assert eng_mod.SYNC_COUNTS["block_until_ready"] == before + 1
+
+
+@pytest.mark.slow
+def test_sharded_mesh_multidevice_subprocess(tmp_path):
+    """4-way mesh on 8 forced host devices: mesh build/repair parity and
+    bounded shard_map compiles — the real-SPMD twin of the host-path
+    tests above."""
+    prog = (
+        "import numpy as np, jax, jax.numpy as jnp, repro\n"
+        "from jax.sharding import Mesh, NamedSharding, PartitionSpec\n"
+        "import repro.ppr.shard as sm\n"
+        "from repro.graph.dynamic import apply_batch, make_batch_update, \\\n"
+        "    touched_vertices_mask\n"
+        "from repro.graph.generators import rmat_edges\n"
+        "from repro.graph.structure import from_coo\n"
+        "from repro.ppr import (IndexConfig, build_sharded_walk_index,\n"
+        "    build_walk_index, ppr_top_k, repair_walk_index,\n"
+        "    repair_walk_index_sharded, unshard_walk_index)\n"
+        "assert len(jax.devices()) == 8, jax.devices()\n"
+        "mesh = Mesh(np.asarray(jax.devices()[:4]), ('model',))\n"
+        "edges, n = rmat_edges(8, 8, seed=1)\n"
+        "g = from_coo(edges[:, 0], edges[:, 1], n,\n"
+        "             edge_capacity=len(edges) + 512)\n"
+        "cfg = IndexConfig(num_walks=32, max_len=12, seed=3)\n"
+        "idx = build_sharded_walk_index(g, cfg, mesh=mesh)\n"
+        "one = build_walk_index(g, cfg)\n"
+        "assert bool(jnp.all(unshard_walk_index(idx).steps == one.steps))\n"
+        "spec = idx.steps.sharding.spec\n"
+        "assert spec == PartitionSpec('model'), spec\n"
+        "rng = np.random.default_rng(0)\n"
+        "cur = g\n"
+        "for s in range(6):\n"
+        "    dele = edges[rng.choice(len(edges), 4, replace=False)]\n"
+        "    ins = rng.integers(0, n, size=(8, 2)).astype(np.int32)\n"
+        "    ins = ins[ins[:, 0] != ins[:, 1]]\n"
+        "    upd = make_batch_update(dele, ins, 8, 8)\n"
+        "    nxt = apply_batch(cur, upd)\n"
+        "    t = touched_vertices_mask(upd, n)\n"
+        "    idx, k1 = repair_walk_index_sharded(idx, nxt, t)\n"
+        "    one, k2 = repair_walk_index(one, nxt, t)\n"
+        "    assert k1 == k2, (k1, k2)\n"
+        "    cur = nxt\n"
+        "assert bool(jnp.all(unshard_walk_index(idx).steps == one.steps))\n"
+        "v_s, _ = ppr_top_k(idx, [7], 10)\n"
+        "v_1, _ = ppr_top_k(one, [7], 10)\n"
+        "assert v_s.tolist() == v_1.tolist()\n"
+        "assert sm.TRACE_COUNTS['build_build'] == 1\n"
+        "assert sm.TRACE_COUNTS['build_stale'] == 1\n"
+        "assert sm.TRACE_COUNTS['repairs'] == 6\n"
+        "assert sm.TRACE_COUNTS['build_repair'] <= 3  # pow2 capacities\n"
+        "print('MESH_PPR_OK')\n"
+    )
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(repo_root, "src"),
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, env=env, cwd=str(tmp_path))
+    assert r.returncode == 0, r.stderr
+    assert "MESH_PPR_OK" in r.stdout
 
 
 def test_exact_path_memoized_within_generation(small, monkeypatch):

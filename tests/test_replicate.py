@@ -15,10 +15,12 @@ import repro  # noqa: F401
 from repro.ft.elastic import ReplicaRoster
 from repro.graph.generators import erdos_renyi_edges
 from repro.graph.structure import from_coo
+from repro.ppr import IndexConfig, build_walk_index
 from repro.serve import (FailoverController, FaultyTransport, IngestQueue,
-                         LinkDown, LogicalClock, RankStore, ReadReplica,
-                         ReplicaDegradedError, ReplicaQueryClient,
-                         ReplicationWriter, ServeEngine, ServeMetrics)
+                         LinkDown, LogicalClock, QueryClient, RankStore,
+                         ReadReplica, ReplicaDegradedError,
+                         ReplicaQueryClient, ReplicationWriter, ServeEngine,
+                         ServeMetrics)
 
 N = 64
 DT = 0.01
@@ -309,6 +311,105 @@ def test_failover_promotes_freshest_replica_without_losing_generation():
     assert r0.epoch == new_w.epoch
     _assert_parity(new_w, r0)
     assert new_w.engine.ingest.latest_seq >= committed_seq
+
+
+def _assert_ppr_parity(writer, replica):
+    """Writer and replica hold the *same walks* (bitwise) and answer
+    index-mode personalized top-k identically."""
+    widx = writer.engine.store.snapshot().ppr_index
+    assert widx is not None and replica.ppr is not None
+    assert bool(jnp.all(replica.ppr.steps == widx.steps))
+    wq = QueryClient(writer.engine.store, writer.engine.ingest)
+    rq = ReplicaQueryClient(replica)
+    for seeds in ([1], [5, 9]):
+        a = rq.personalized_top_k(seeds, 5, mode="index")
+        b = wq.personalized_top_k(seeds, 5, mode="index")
+        assert a.vertices.tolist() == b.vertices.tolist()
+        np.testing.assert_array_equal(np.asarray(a.ranks),
+                                      np.asarray(b.ranks))
+
+
+def test_ppr_chaos_heals_keep_bitwise_index_parity(monkeypatch):
+    """Walk-index parity through the full chaos schedule — dropped
+    deltas → retransmit, partition past the log → anchor resync,
+    writer death → failover — with index-mode top-k identical after
+    every heal.  The anchor resync must heal by *incremental repair*
+    (anchors now carry the index identity), and failover must promote
+    the replica's index into the new writer: zero ``build_walk_index``
+    calls after bootstrap, on either side."""
+    clock = LogicalClock()
+    transport = FaultyTransport(seed=5)
+    roster = ReplicaRoster(heartbeat_timeout=0.5)
+    cfg = IndexConfig(num_walks=8, max_len=8, seed=5)
+
+    def factory(graph, last_seq, generation):
+        ingest = IngestQueue(flush_size=8, flush_interval=0.0,
+                             max_pending=1 << 16,
+                             start_seq=last_seq + 1, clock=clock)
+        return ServeEngine(graph, ingest, RankStore(),
+                           metrics=ServeMetrics(), method="frontier_prune",
+                           clock=clock, ppr_index=cfg)
+
+    engine = factory(_graph(), last_seq=-1, generation=0)
+    engine.bootstrap()
+    w = ReplicationWriter(engine, transport, anchor_every=2,
+                          log_capacity=2, clock=clock)
+    w.attach()
+    transport.set_writer(w)
+    w.heartbeat(roster)
+    r = _replica("r0", clock, transport, roster, ppr_cfg=cfg)
+    assert r.bootstrap()                   # builds the replica index once
+    _assert_ppr_parity(w, r)
+
+    # from here on, any from-scratch rebuild is a regression
+    builds = []
+    import repro.serve.engine as eng_mod
+    import repro.serve.replicate as rep_mod
+    for mod in (eng_mod, rep_mod):
+        orig = mod.build_walk_index
+        monkeypatch.setattr(
+            mod, "build_walk_index",
+            lambda *a, _o=orig, **k: (builds.append(1), _o(*a, **k))[1])
+
+    # -- heal 1: dropped deltas -> gap -> retransmit --------------------
+    transport.drop_p = 0.3
+    _feed(w, 40, clock, roster, replicas=[r], seed=2)
+    transport.drop_p = 0.0
+    _settle(w, [r], clock, roster)
+    _assert_parity(w, r)
+    _assert_ppr_parity(w, r)
+
+    # -- heal 2: partition beyond the 2-entry log -> anchor resync ------
+    transport.partition("r0")
+    _feed(w, 40, clock, roster, replicas=[r], seed=3)
+    transport.heal("r0")
+    _settle(w, [r], clock, roster)
+    assert r.resyncs >= 2                  # bootstrap + post-partition
+    _assert_parity(w, r)
+    _assert_ppr_parity(w, r)
+    assert builds == []                    # resynced by repair, no rebuild
+
+    # -- heal 3: writer dies -> failover promotes the replica -----------
+    committed_gen = w.engine.store.generation
+    w.kill()
+    clock.advance(1.0)
+    r.pump()                               # replica keeps beating
+    ctl = FailoverController(transport, roster, factory,
+                             num_vertices=N, clock=clock)
+    new_w, promoted = ctl.check(w, [r])
+    assert promoted is r
+    assert new_w.engine.store.generation >= committed_gen
+    assert builds == []                    # index carried over, not rebuilt
+    snap = new_w.engine.store.snapshot()
+    fresh = build_walk_index(snap.graph, cfg)
+    assert bool(jnp.all(snap.ppr_index.steps == fresh.steps))
+    # the promoted writer keeps maintaining the carried index correctly
+    transport.set_writer(new_w)
+    _feed(new_w, 24, clock, roster, seed=11)
+    snap = new_w.engine.store.snapshot()
+    fresh = build_walk_index(snap.graph, cfg)
+    assert bool(jnp.all(snap.ppr_index.steps == fresh.steps))
+    assert builds == []
 
 
 def test_failover_restores_checkpoint_when_replicas_lag(tmp_path):
